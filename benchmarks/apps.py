@@ -1,0 +1,85 @@
+"""Workload GEMMs — paper Table 3.
+
+For each network we enumerate the GEMMs of its layers across the paper's
+hyperparameter and input grids (forward + dgrad + wgrad per paper Fig. 2 ⑥),
+in the paper's M_N_K_T1_T2 notation.  ~410 GEMMs total across 10 apps,
+matching §5.2 (output sizes 32K–168M, K 64–20K).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import GemmDesc
+
+# Table 3
+RNNS = {
+    "gnmt": {"H": [512, 1024], "B": [64, 128, 256, 512], "gates": 4},
+    "ds2": {"H": [800], "B": [64, 128, 256], "gates": 4},
+    "rnnt": {"H": [2048], "B": [64, 128, 256, 512], "gates": 4},
+}
+TRANSFORMERS = {
+    "transformer": {"H": [512, 1024], "T": [512, 1024, 2048, 4096, 3072, 8192]},
+    "bert": {"H": [768, 1024], "T": [2048, 3072, 4096, 8192]},
+    "gpt2": {"H": [1280, 1600], "T": [2048, 3072, 4096, 8192]},
+    "gpt3": {"H": [4096, 5140], "T": [2048, 3072, 4096, 8192]},
+    "mega_bert": {"H": [1024, 2048, 2560], "T": [2048, 3072, 4096, 8192]},
+    "mega_gpt": {"H": [1920, 3072], "T": [2048, 3072, 4096, 8192]},
+    "tnlg": {"H": [4256], "T": [2048, 3072, 4096, 8192]},
+}
+
+
+def _fwd_bwd(M: int, N: int, K: int, dtype: str) -> List[GemmDesc]:
+    """Forward GEMM + its two backward GEMMs (dgrad, wgrad)."""
+    return [
+        GemmDesc(M, N, K, False, True, dtype),    # fwd (B stored (N,K), §2.1.2)
+        GemmDesc(M, K, N, False, False, dtype),   # dgrad
+        GemmDesc(K, N, M, True, False, dtype),    # wgrad
+    ]
+
+
+def app_gemms(dtype: str = "bf16") -> Dict[str, List[GemmDesc]]:
+    out: Dict[str, List[GemmDesc]] = {}
+    for name, hp in RNNS.items():
+        descs: List[GemmDesc] = []
+        for H in hp["H"]:
+            for B in hp["B"]:
+                # LSTM cell: input + recurrent projections (4H gates)
+                descs += _fwd_bwd(B, hp["gates"] * H, H, dtype)
+        out[name] = _dedup(descs)
+    for name, hp in TRANSFORMERS.items():
+        descs = []
+        for H in hp["H"]:
+            for T in hp["T"]:
+                descs += _fwd_bwd(T, H, H, dtype)        # QKV/out proj
+                descs += _fwd_bwd(T, 4 * H, H, dtype)    # FFN up
+                descs += _fwd_bwd(T, H, 4 * H, dtype)    # FFN down
+        out[name] = _dedup(descs)
+    return out
+
+
+def attention_bgemms(dtype: str = "bf16") -> List[GemmDesc]:
+    """Strided batched-GEMMs from Transformer attention (§6.7): per-SL
+    score/context GEMMs, batch = heads."""
+    descs = []
+    for H, heads in ((1024, 16), (768, 12)):
+        hd = H // heads
+        for SL in (128, 256, 384, 512, 1024, 1536, 2048, 3072, 4096, 8192):
+            descs.append(GemmDesc(SL, SL, hd, False, True, dtype, batch=heads))
+            descs.append(GemmDesc(SL, hd, SL, False, False, dtype, batch=heads))
+    return _dedup(descs)
+
+
+def _dedup(descs: List[GemmDesc]) -> List[GemmDesc]:
+    seen, out = set(), []
+    for d in descs:
+        if d.key() not in seen:
+            seen.add(d.key())
+            out.append(d)
+    return out
+
+
+def all_gemms(dtype: str = "bf16") -> List[GemmDesc]:
+    out: List[GemmDesc] = []
+    for descs in app_gemms(dtype).values():
+        out += descs
+    return _dedup(out)

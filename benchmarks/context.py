@@ -1,0 +1,67 @@
+"""Shared benchmark context: tuned GO library + trained predictor, cached on
+disk so ``python -m benchmarks.run`` is fast and deterministic."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import (
+    DEFAULT_SPEC,
+    ConcurrencyController,
+    GOLibrary,
+    Predictor,
+    TPUSpec,
+    accuracy_by_available,
+    generate_gemm_pool,
+    profile_dataset,
+    train_predictor,
+)
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+
+@dataclass
+class BenchContext:
+    lib: GOLibrary
+    predictor: Predictor
+    spec: TPUSpec
+    test_accuracy: dict
+
+    @property
+    def controller(self) -> ConcurrencyController:
+        return ConcurrencyController(
+            library=self.lib, predictor=self.predictor, spec=self.spec
+        )
+
+    @property
+    def oracle(self) -> ConcurrencyController:
+        return ConcurrencyController(library=self.lib, predictor=None,
+                                     spec=self.spec)
+
+
+def build_context(spec: TPUSpec = DEFAULT_SPEC) -> BenchContext:
+    RESULTS.mkdir(exist_ok=True)
+    lib = GOLibrary(RESULTS / "golib.json", spec=spec)
+
+    pred_path = RESULTS / "predictor.json"
+    acc_path = RESULTS / "predictor_acc.json"
+    pool = generate_gemm_pool(1072)
+    X, y = profile_dataset(pool, lib, spec)
+    if pred_path.exists():
+        predictor = Predictor.load(pred_path)
+    else:
+        rng = np.random.default_rng(0)
+        idx = rng.permutation(len(X))
+        ntr = int(0.9 * len(X))
+        predictor = train_predictor(X[idx[:ntr]], y[idx[:ntr]])
+        predictor.save(pred_path)
+    rng = np.random.default_rng(0)
+    idx = rng.permutation(len(X))
+    ntr = int(0.9 * len(X))
+    acc = accuracy_by_available(predictor, X[idx[ntr:]], y[idx[ntr:]])
+    lib.save()
+    import json
+    acc_path.write_text(json.dumps(acc))
+    return BenchContext(lib, predictor, spec, acc)

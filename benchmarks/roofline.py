@@ -1,0 +1,191 @@
+"""Roofline analysis from the dry-run artifacts.
+
+XLA cost_analysis counts a scan (while) body ONCE regardless of trip count,
+so per-cell FLOPs / bytes / collective-bytes are reconstructed from two
+reduced-depth compiles (dryrun --depth d1/d2):
+
+    per_layer = (C(d2) - C(d1)) / (d2 - d1)
+    total     = C(d1) + (L_total - d1) * per_layer
+
+(exact for per-layer-homogeneous stacks; zamba2 uses d∈{6,12} so each
+segment holds one shared-attention application).
+
+Terms (TPU v5e, per chip — cost_analysis of a partitioned module is already
+the per-device program):
+    compute    = FLOPs / 197e12            (bf16; fp32 ops counted at bf16
+                                            peak — conservative)
+    memory     = bytes / 819e9
+    collective = collective_bytes / 50e9   (per-device bytes over ICI)
+
+    MODEL_FLOPS = 6·N_active·tokens (train) | 2·N_active·tokens (serve)
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.configs import get_arch, get_shape, list_archs  # noqa: E402
+from repro.configs.shapes import SHAPES  # noqa: E402
+
+DRY = ROOT / "results" / "dryrun"
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+CHIPS = 256
+
+
+def _load(arch, shape, mesh="16x16", depth=None):
+    sfx = f"__L{depth}" if depth else ""
+    f = DRY / f"{arch}__{shape}__{mesh}{sfx}.json"
+    if not f.exists():
+        return None
+    return json.loads(f.read_text())
+
+
+def _probe_depths(arch):
+    return (6, 12) if get_arch(arch).family == "hybrid" else (2, 4)
+
+
+def _scan_layers(cfg):
+    if cfg.family == "ssm":
+        return cfg.n_layers // cfg.slstm_every  # groups
+    if cfg.family == "moe":
+        return cfg.n_layers - cfg.first_dense_layers
+    return cfg.n_layers
+
+
+def _metrics(rec):
+    """Prefer call-graph-walked costs (exact trip counts, library dots);
+    fall back to raw cost_analysis for legacy records."""
+    if "walked_flops" in rec:
+        return {
+            # dots (walked) + elementwise (cost_analysis, body-once is a
+            # <2% error for elementwise totals at these depths)
+            "flops": rec["walked_flops"] + max(rec.get("flops", 0.0), 0.0),
+            "bytes": rec["walked_dot_bytes"] + max(rec.get("hlo_bytes", 0.0), 0.0),
+            "coll": rec["walked_coll_total"],
+        }
+    return {
+        "flops": rec.get("flops", 0.0),
+        "bytes": rec.get("hlo_bytes", 0.0),
+        "coll": float(rec.get("collectives", {}).get("total_bytes", 0)),
+    }
+
+
+def extrapolate(arch, shape):
+    d1, d2 = _probe_depths(arch)
+    r1, r2 = _load(arch, shape, depth=d1), _load(arch, shape, depth=d2)
+    if not (r1 and r2) or r1["status"] != "ok" or r2["status"] != "ok":
+        return None
+    cfg = get_arch(arch)
+    L = _scan_layers(cfg)
+    if cfg.family == "hybrid":
+        L = cfg.n_layers  # depths are raw layer counts for zamba
+        l1, l2 = d1, d2
+    elif cfg.family == "ssm":
+        l1, l2 = d1, d2  # groups
+    else:
+        l1, l2 = d1, d2
+    m1, m2 = _metrics(r1), _metrics(r2)
+    out = {}
+    for k in m1:
+        per = (m2[k] - m1[k]) / (l2 - l1)
+        out[k] = max(m1[k] + (L - l1) * per, 0.0)
+    return out
+
+
+def model_flops_per_chip(arch, shape):
+    cfg, sh = get_arch(arch), get_shape(shape)
+    n = cfg.active_param_count()
+    if sh.kind == "train":
+        tokens = sh.global_batch * sh.seq_len
+        if cfg.frontend == "vision_patches":
+            tokens = sh.global_batch * (sh.seq_len - 256)
+        return 6.0 * n * tokens / CHIPS
+    if sh.kind == "prefill":
+        return 2.0 * n * sh.global_batch * sh.seq_len / CHIPS
+    return 2.0 * n * sh.global_batch / CHIPS  # decode: one token per seq
+
+
+def analyze_cell(arch, shape):
+    full = _load(arch, shape)
+    if full is None:
+        return {"arch": arch, "shape": shape, "status": "missing"}
+    if full["status"] == "skipped":
+        return {"arch": arch, "shape": shape, "status": "skipped",
+                "reason": full.get("reason", "")}
+    if full["status"] != "ok":
+        return {"arch": arch, "shape": shape, "status": "error"}
+    if "walked_flops" in full:
+        ext = _metrics(full)          # walker handles trip counts exactly
+    else:
+        ext = extrapolate(arch, shape) or _metrics(full)
+    t_comp = ext["flops"] / PEAK
+    t_mem = ext["bytes"] / HBM
+    t_coll = ext["coll"] / ICI
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_chip(arch, shape)
+    step = max(t_comp, t_mem, t_coll)
+    return {
+        "arch": arch, "shape": shape, "status": "ok",
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_chip": mf,
+        "useful_flops_ratio": mf / ext["flops"] if ext["flops"] else 0.0,
+        "roofline_fraction": (mf / PEAK) / step if step else 0.0,
+        "hlo_flops": ext["flops"], "hlo_bytes": ext["bytes"],
+        "coll_bytes": ext["coll"],
+        "temp_bytes_per_dev": full.get("temp_size_in_bytes"),
+        "fix_hint": _fix_hint(dominant, terms),
+    }
+
+
+def _fix_hint(dominant, terms):
+    if dominant == "compute":
+        return ("compute-bound: cut remat recompute (policy: save dots) or "
+                "raise per-chip batch only if memory allows")
+    if dominant == "memory":
+        return ("HBM-bound: fuse/flash the attention or scan path, enlarge "
+                "effective tile reuse, cast caches/activations to bf16")
+    return ("ICI-bound: reshard to cut all-gathers (sequence-parallel "
+            "norms, ZeRO prefetch), overlap collectives with compute, "
+            "compress DP gradients")
+
+
+def main():
+    rows = []
+    for arch in list_archs():
+        for shape in SHAPES:
+            rows.append(analyze_cell(arch, shape))
+    out = ROOT / "results" / "roofline.json"
+    out.write_text(json.dumps(rows, indent=1))
+
+    # markdown table
+    md = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPs/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] != "ok":
+            md.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | "
+                f"{r['status']} | — | — |"
+            )
+            continue
+        md.append(
+            "| {arch} | {shape} | {compute_s:.4f} | {memory_s:.4f} | "
+            "{collective_s:.4f} | {dominant} | {useful_flops_ratio:.2f} | "
+            "{roofline_fraction:.3f} |".format(**r)
+        )
+    (ROOT / "results" / "roofline.md").write_text("\n".join(md) + "\n")
+    print("\n".join(md))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig10]
+
+Prints ``name,us_per_call,derived`` CSV and writes results/bench.csv.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks import tables  # noqa: E402
+from benchmarks.context import RESULTS, build_context  # noqa: E402
+
+TABLES = [
+    ("fig3_concurrency_sweep", tables.concurrency_sweep),
+    ("fig10_per_app_speedups", tables.per_app_speedups),
+    ("fig11_go_kernel_props", tables.go_kernel_props),
+    ("sec6.6_predictor_accuracy", tables.predictor_accuracy),
+    ("sec6.7_hetero_batched", tables.hetero_batched),
+    ("sec6.11_fusion_vs_concurrency", tables.fusion_vs_concurrency),
+    ("sec6.12_veltair", tables.veltair_comparison),
+    ("sec7.3_rc_ablation", tables.rc_ablation),
+    ("sec7.4_scaling", tables.scaling_gpu),
+    ("sec7.5_knn_prc", tables.knn_prc),
+    ("fig14_reduced_precision", tables.reduced_precision),
+    ("wallclock_sanity", tables.cpu_wallclock),
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    ctx = build_context()
+    lines = ["name,us_per_call,derived"]
+    print(lines[0])
+    for name, fn in TABLES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        for row in fn(ctx):
+            line = f"{row[0]},{row[1]:.2f},{row[2]}"
+            print(line, flush=True)
+            lines.append(line)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "bench.csv").write_text("\n".join(lines) + "\n")
+    ctx.lib.save()
+
+
+if __name__ == "__main__":
+    main()

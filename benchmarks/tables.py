@@ -1,0 +1,365 @@
+"""One function per paper table/figure.  Every function returns CSV rows
+``(name, us_per_call, derived)`` — us_per_call is the modeled (or measured)
+latency of the subject configuration; derived carries the paper-comparable
+ratio/metric.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+from typing import List, Tuple
+
+import numpy as np
+
+from benchmarks.apps import all_gemms, app_gemms, attention_bgemms
+from benchmarks.context import BenchContext
+from repro.core import (
+    CDS,
+    CP_OVERHEAD_S,
+    GemmDesc,
+    TPUSpec,
+    go_kernel_properties,
+    group_time,
+    isolated_time,
+    kernel_stats,
+    sequential_time,
+)
+from repro.core.predictor import CLASSES, gemm_features
+from repro.core.tuner import tune_gemm, tune_rc
+from repro.kernels.gemm.ops import TileConfig
+
+Row = Tuple[str, float, str]
+
+
+def _gm(xs) -> float:
+    xs = np.asarray(list(xs), float)
+    return float(np.exp(np.log(np.maximum(xs, 1e-12)).mean()))
+
+
+def _times_for(ctx: BenchContext, d: GemmDesc, ig: int):
+    """(sequential, default, go, goldyloc, oracle) times for ig copies."""
+    e = ctx.lib.get(d)
+    seq = sequential_time([(d, e.isolated)] * ig, ctx.spec)
+    default = group_time([(d, e.isolated)] * ig, ctx.spec)
+    go = group_time([(d, e.tile_for_cd(ig))] * ig, ctx.spec)
+
+    # CP overhead is hidden behind prior kernels (§6.5) — tracked on the
+    # Schedule, excluded from steady-state latency like the paper does.
+    def sched_time(ctrl):
+        return ctrl.plan([d] * ig).modeled_time_s
+
+    gold = sched_time(ctx.controller)
+    oracle = sched_time(ctx.oracle)
+    return seq, default, go, gold, oracle
+
+
+# ------------------------------------------------------------- Fig. 3(a,b)
+def concurrency_sweep(ctx: BenchContext) -> List[Row]:
+    rows: List[Row] = []
+    fig3a = [  # growing N, paper's "fewer FLOPs benefit less"
+        GemmDesc(4096, 128, 1024), GemmDesc(4096, 256, 1024),
+        GemmDesc(4096, 1024, 1024), GemmDesc(4096, 4096, 1024),
+    ]
+    for d in fig3a:
+        for ig in (2, 4):
+            seq, default, *_ = _times_for(ctx, d, ig)
+            rows.append((
+                f"fig3a/{d.key()}/IG{ig}", default * 1e6,
+                f"speedup_vs_seq={seq / default:.3f}",
+            ))
+    fig3b = [  # same FLOPs, different shape/transpose
+        GemmDesc(4096, 1024, 2048), GemmDesc(4096, 2048, 1024),
+        GemmDesc(4096, 2048, 1024, False, True),
+        GemmDesc(4096, 1024, 2048, True, False),
+    ]
+    for d in fig3b:
+        for ig in (2, 4, 8, 16):
+            seq, default, *_ = _times_for(ctx, d, ig)
+            rows.append((
+                f"fig3b/{d.key()}/IG{ig}", default * 1e6,
+                f"speedup_vs_seq={seq / default:.3f}",
+            ))
+    return rows
+
+
+# ------------------------------------------------------------------ Fig. 10
+def per_app_speedups(ctx: BenchContext) -> List[Row]:
+    rows: List[Row] = []
+    overall = {c: {2: [], 16: []} for c in
+               ("default", "go", "goldyloc", "oracle")}
+    for app, descs in app_gemms().items():
+        for ig in (2, 16):
+            sp = {c: [] for c in overall}
+            for d in descs:
+                seq, default, go, gold, oracle = _times_for(ctx, d, ig)
+                sp["default"].append(seq / default)
+                sp["go"].append(seq / go)
+                sp["goldyloc"].append(seq / gold)
+                sp["oracle"].append(seq / oracle)
+            for c in sp:
+                overall[c][ig] += sp[c]
+            rows.append((
+                f"fig10/{app}/IG{ig}", 0.0,
+                "geomean_vs_seq default={:.3f} go={:.3f} goldyloc={:.3f} "
+                "oracle={:.3f}".format(*(_gm(sp[c]) for c in
+                                         ("default", "go", "goldyloc",
+                                          "oracle"))),
+            ))
+    for ig in (2, 16):
+        rows.append((
+            f"fig10/ALL/IG{ig}", 0.0,
+            "geomean_vs_seq default={:.3f} go={:.3f} goldyloc={:.3f} "
+            "oracle={:.3f} max_goldyloc={:.3f}".format(
+                _gm(overall["default"][ig]), _gm(overall["go"][ig]),
+                _gm(overall["goldyloc"][ig]), _gm(overall["oracle"][ig]),
+                max(overall["goldyloc"][ig]),
+            ),
+        ))
+    return rows
+
+
+# ------------------------------------------------------------------ Fig. 11
+def go_kernel_props(ctx: BenchContext) -> List[Row]:
+    waves_r, traffic_r, uniq = [], [], 0
+    descs = all_gemms()
+    for d in descs:
+        e = ctx.lib.get(d)
+        for cd in (2, 16):
+            p = go_kernel_properties(d, e, cd, ctx.spec)
+            if p["unique_kernel"]:
+                uniq += 1
+                waves_r.append(p["waves_ratio"])
+                traffic_r.append(p["traffic_ratio"])
+    frac_fewer_waves = float(np.mean(np.asarray(waves_r) <= 1.0)) if waves_r else 0
+    frac_less_traffic = float(np.mean(np.asarray(traffic_r) <= 1.0)) if traffic_r else 0
+    return [
+        ("fig11/unique_go_kernels", 0.0,
+         f"count={uniq} of {2 * len(descs)} (desc,cd) pairs"),
+        ("fig11/waves_ratio", 0.0,
+         f"median={np.median(waves_r):.3f} frac<=1={frac_fewer_waves:.2f}"),
+        ("fig11/traffic_ratio", 0.0,
+         f"median={np.median(traffic_r):.3f} frac<=1={frac_less_traffic:.2f}"),
+    ]
+
+
+# -------------------------------------------------------------------- §6.6
+def predictor_accuracy(ctx: BenchContext) -> List[Row]:
+    rows = [
+        (f"sec6.6/accuracy_avail{k}", 0.0,
+         f"test_accuracy={v:.3f} (paper: {p})")
+        for (k, v), p in zip(sorted(ctx.test_accuracy.items()),
+                             (0.82, 0.70, 0.62, 0.47))
+    ]
+    # Oracle gap (paper: within 3% geomean)
+    gaps = []
+    for d in all_gemms()[::7]:
+        for ig in (2, 16):
+            *_, gold, oracle = _times_for(ctx, d, ig)
+            gaps.append(oracle / gold)
+    rows.append(("sec6.6/oracle_gap", 0.0,
+                 f"geomean_goldyloc_vs_oracle={_gm(gaps):.3f} (paper ≥0.97)"))
+    return rows
+
+
+# -------------------------------------------------------------------- §6.7
+def hetero_batched(ctx: BenchContext) -> List[Row]:
+    rows: List[Row] = []
+    rng = np.random.default_rng(3)
+    descs = all_gemms()
+    sp16 = []
+    for _ in range(40):
+        a, b = descs[rng.integers(len(descs))], descs[rng.integers(len(descs))]
+        b = replace(b, N=a.N, K=a.K, ta=a.ta, tb=a.tb)  # compatible pair
+        mix = ([a] * 8) + ([b] * 8)
+        e_a, e_b = ctx.lib.get(a), ctx.lib.get(b)
+        seq = sequential_time([(d, ctx.lib.get(d).isolated) for d in mix],
+                              ctx.spec)
+        default = group_time([(d, ctx.lib.get(d).isolated) for d in mix],
+                             ctx.spec)
+        sched = ctx.controller.plan(mix)
+        sp16.append(default / sched.modeled_time_s)
+    rows.append(("sec6.7/hetero_IG16", 0.0,
+                 f"goldyloc_vs_default_geomean={_gm(sp16):.3f} (paper 1.15)"))
+
+    # heterogeneous B-GEMMs: pairs/quads of *different-SL* attention GEMMs
+    # executed concurrently (paper's variable-length-input scenario)
+    bgs = attention_bgemms()
+    bg = []
+    for ig in (2, 4):
+        for i in range(0, len(bgs) - ig, ig):
+            mix = bgs[i : i + ig]
+            default = group_time(
+                [(d, ctx.lib.get(d).isolated) for d in mix], ctx.spec
+            )
+            go = group_time(
+                [(d, ctx.lib.get(d).tile_for_cd(ig)) for d in mix], ctx.spec
+            )
+            bg.append(default / go)
+    rows.append(("sec6.7/batched_gemm_hetero", 0.0,
+                 f"go_vs_default_geomean={_gm(bg):.3f} max={max(bg):.2f} "
+                 "(paper: 1.05-1.08 geomean, 1.94 max)"))
+    return rows
+
+
+# ------------------------------------------------------------------- §6.11
+def fusion_vs_concurrency(ctx: BenchContext) -> List[Row]:
+    rows: List[Row] = []
+    for app, H, T in (("bert", 1024, 4096), ("gnmt", 1024, 256)):
+        d = GemmDesc(T, H, H) if app == "bert" else GemmDesc(T, 4 * H, H)
+        n = 3 if app == "bert" else 8
+        choice, t_fused, t_group = ctx.controller.plan_shared_input([d] * n)
+        rows.append((
+            f"sec6.11/{app}_qkv", t_group * 1e6,
+            f"choice={choice} fused_us={t_fused * 1e6:.1f} "
+            f"group_vs_fused={t_fused / t_group:.3f}",
+        ))
+    return rows
+
+
+# -------------------------------------------------------------------- §7.3
+def rc_ablation(ctx: BenchContext) -> List[Row]:
+    descs = all_gemms()[::3]
+    prefer = {"GPU": 0, "GPU/2": 0, "GPU/4": 0}
+    gemms_gaining_gpu4 = 0
+    for d in descs:
+        e = ctx.lib.get(d)
+        for cd in CDS:
+            prefer[e.rc_source[cd]] += 1
+        if any(e.rc_source[cd] == "GPU/4" for cd in CDS):
+            gemms_gaining_gpu4 += 1
+    total = sum(prefer.values())
+    return [(
+        "sec7.3/rc_preference", 0.0,
+        f"GPU={prefer['GPU'] / total:.2f} GPU/2={prefer['GPU/2'] / total:.2f} "
+        f"GPU/4={prefer['GPU/4'] / total:.2f} "
+        f"gemms_gaining_from_GPU/4={gemms_gaining_gpu4 / len(descs):.2f} "
+        "(paper: 0.34)",
+    )]
+
+
+# -------------------------------------------------------------------- §7.4
+def scaling_gpu(ctx: BenchContext) -> List[Row]:
+    rows: List[Row] = []
+    descs = all_gemms()[::5]
+    for name, frac in (("quarter", 0.25), ("half", 0.5), ("full", 1.0)):
+        spec = replace(
+            ctx.spec, peak_flops_bf16=ctx.spec.peak_flops_bf16 * frac,
+            peak_flops_fp32=ctx.spec.peak_flops_fp32 * frac,
+            vmem_bytes=int(ctx.spec.vmem_bytes * frac),
+        )
+        sps = []
+        for d in descs:
+            e = tune_gemm(d, spec, cds=(4,))
+            seq4 = sequential_time([(d, e.isolated)] * 4, spec)
+            default = group_time([(d, e.isolated)] * 4, spec)
+            cd = e.preferred_cd()
+            cd = min(cd, 4)
+            tile = e.tile_for_cd(cd)
+            t = group_time([(d, tile)] * cd, spec) * (4 / max(cd, 1)) \
+                if cd > 1 else seq4
+            sps.append(default / t)
+        rows.append((f"sec7.4/chip_{name}", 0.0,
+                     f"goldyloc_vs_default_geomean_4P={_gm(sps):.3f}"))
+    return rows
+
+
+# ------------------------------------------------------------------- §6.12
+def veltair_comparison(ctx: BenchContext) -> List[Row]:
+    """VELTAIR's CPU-derived small-tile policy applied to TPU."""
+    descs = all_gemms()[::5]
+    small = TileConfig(128, 128, 128)
+    deltas = {ig: [] for ig in (2, 4, 8, 16)}
+    for d in descs:
+        e = ctx.lib.get(d)
+        for ig in deltas:
+            t_go = group_time([(d, e.tile_for_cd(ig))] * ig, ctx.spec)
+            t_small = group_time([(d, small)] * ig, ctx.spec)
+            deltas[ig].append(t_small / t_go)
+    return [(
+        f"sec6.12/veltair_IG{ig}", 0.0,
+        f"small_tile_slowdown={_gm(v):.3f} (paper: 1.17-1.26)",
+    ) for ig, v in deltas.items()]
+
+
+# -------------------------------------------------------------------- §7.5
+def knn_prc(ctx: BenchContext) -> List[Row]:
+    """KNN-predicted preferred-RC from 20% exhaustive tuning."""
+    descs = all_gemms()
+    rng = np.random.default_rng(5)
+    idx = rng.permutation(len(descs))
+    n_tuned = len(descs) // 5
+    tuned = [descs[i] for i in idx[:n_tuned]]
+    rest = [descs[i] for i in idx[n_tuned:]]
+
+    feats = {}
+    for d in descs:
+        e = ctx.lib.get(d)
+        feats[d.key()] = np.asarray(
+            [np.log2(d.output_size), e.isolated.bm * e.isolated.bn], float
+        )
+    sps = []
+    for d in rest:
+        x = feats[d.key()]
+        dists = [(np.linalg.norm(x - feats[t.key()]), t) for t in tuned]
+        _, nn = min(dists, key=lambda p: p[0])
+        e_nn = ctx.lib.get(nn)
+        e_true = ctx.lib.get(d)
+        for ig in (2, 16):
+            t_knn = group_time([(d, e_nn.tile_for_cd(ig))] * ig, ctx.spec)
+            default = group_time([(d, e_true.isolated)] * ig, ctx.spec)
+            sps.append(default / t_knn)
+    return [(
+        "sec7.5/knn_prc", 0.0,
+        f"knn_vs_default_geomean={_gm(sps):.3f} tuning_cost=20% "
+        "(paper: +2-9% over default)",
+    )]
+
+
+# ------------------------------------------------- Fig. 14 reduced precision
+def reduced_precision(ctx: BenchContext) -> List[Row]:
+    rows: List[Row] = []
+    for app in ("gpt2", "gpt3", "tnlg"):
+        sps = {"f32": [], "bf16": []}
+        for d in app_gemms("f32")[app]:
+            for dt in ("f32", "bf16"):
+                dd = replace(d, dtype=dt)
+                e = ctx.lib.get(dd)
+                default = group_time([(dd, e.isolated)] * 16, ctx.spec)
+                go = group_time([(dd, e.tile_for_cd(16))] * 16, ctx.spec)
+                sps[dt].append(default / go)
+        rows.append((
+            f"fig14/{app}_16P", 0.0,
+            f"go_vs_default f32={_gm(sps['f32']):.3f} "
+            f"bf16={_gm(sps['bf16']):.3f} (paper fp16: 1.06-1.14)",
+        ))
+    return rows
+
+
+# ------------------------------------------- wall-clock sanity (real XLA)
+def cpu_wallclock(ctx: BenchContext) -> List[Row]:
+    """Real timed execution on this host: sequential dispatch vs one grouped
+    dispatch — measures genuine launch-amortization on actual hardware."""
+    import jax
+    import jax.numpy as jnp
+
+    rows: List[Row] = []
+    G, M, N, K = 8, 256, 256, 256
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (G, M, K), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (G, K, N), jnp.float32)
+
+    seq = jax.jit(lambda a, b: [a[i] @ b[i] for i in range(G)])
+    grp = jax.jit(lambda a, b: jnp.einsum("gmk,gkn->gmn", a, b))
+    for f in (seq, grp):
+        f(a, b)  # warm
+    t0 = time.perf_counter()
+    for _ in range(50):
+        jax.block_until_ready(seq(a, b))
+    t_seq = (time.perf_counter() - t0) / 50
+    t0 = time.perf_counter()
+    for _ in range(50):
+        jax.block_until_ready(grp(a, b))
+    t_grp = (time.perf_counter() - t0) / 50
+    rows.append(("wallclock/grouped_vs_seq_8x256", t_grp * 1e6,
+                 f"speedup={t_seq / t_grp:.3f} (host XLA, real time)"))
+    return rows

@@ -1,0 +1,41 @@
+"""Reproduce the paper's Fig. 3 / Fig. 5 concurrency-behaviour sweeps.
+
+    PYTHONPATH=src python examples/concurrency_sweep.py
+"""
+from repro.core import (
+    GemmDesc,
+    GOLibrary,
+    group_time,
+    sequential_time,
+)
+
+
+def main():
+    lib = GOLibrary()
+    print("Fig3(a): speedup of IG concurrent GEMMs vs sequential "
+          "(growing N — more FLOPs benefit more only up to a point)")
+    for N in (128, 256, 1024, 4096):
+        d = GemmDesc(4096, N, 1024)
+        e = lib.get(d)
+        row = [f"IG{ig}={e.speedup[ig]:.2f}x" for ig in (2, 4)]
+        print(f"  4096_{N}_1024_00: " + " ".join(row))
+
+    print("\nFig5(b)-①: same M,N but growing K — large K contends "
+          "(panel residency lost at high CD)")
+    for K in (256, 512, 1024, 2048, 4096, 8192, 20480):
+        d = GemmDesc(2048, 2048, K)
+        e = lib.get(d)
+        row = [f"CD{ig}={e.speedup[ig]:.2f}x" for ig in (2, 8, 16)]
+        print(f"  K={K:<6}: " + " ".join(row) +
+              f"  -> preferred CD={e.preferred_cd()}")
+
+    print("\nFig5(b)-②: transpose changes the story at fixed size")
+    for ta, tb in ((False, False), (False, True), (True, False)):
+        d = GemmDesc(2048, 2048, 2048, ta, tb)
+        e = lib.get(d)
+        print(f"  T1T2={int(ta)}{int(tb)}: CD16 speedup {e.speedup[16]:.2f}x "
+              f"preferred CD={e.preferred_cd()}")
+
+
+if __name__ == "__main__":
+    main()

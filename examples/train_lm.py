@@ -1,0 +1,79 @@
+"""End-to-end training driver: ~100M-param decoder LM, fault-tolerant loop,
+learnable synthetic (bigram) data so loss visibly descends.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+(CPU-friendly defaults; on a pod the same driver shards via launch/train.)
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import InputShape
+from repro.data.pipeline import make_batch
+from repro.dist.fault_tolerance import FaultTolerantDriver, FTConfig
+from repro.models import build_model
+from repro.optim import AdamW, AdamWConfig
+from repro.train.train_loop import make_train_step, train_init
+
+DEMO_100M = ArchConfig(
+    name="demo-100m", family="dense", n_layers=12, d_model=768,
+    n_heads=12, n_kv_heads=12, d_ff=3072, vocab_size=32000,
+)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--tiny", action="store_true",
+                    help="4-layer d256 variant for quick CPU runs")
+    args = ap.parse_args(argv)
+
+    cfg = DEMO_100M
+    if args.tiny:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, n_layers=4, d_model=256, n_heads=8,
+                                  n_kv_heads=8, d_ff=1024, vocab_size=2048)
+    model = build_model(cfg)
+    n_params = sum(
+        x.size for x in jax.tree.leaves(
+            jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+        )
+    )
+    print(f"[train_lm] {cfg.name}: {n_params / 1e6:.1f}M params")
+
+    opt = AdamW(AdamWConfig(lr=6e-4, total_steps=args.steps,
+                            warmup_steps=max(args.steps // 20, 5)))
+    state = train_init(model, opt, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(model, opt, compute_dtype=jnp.float32),
+                      donate_argnums=(0,))
+    shape = InputShape("demo", args.seq, args.batch, "train")
+
+    def batches():
+        s = 0
+        while True:
+            yield s, make_batch(cfg, shape, s, mode="markov")
+            s += 1
+
+    driver = FaultTolerantDriver(
+        step_fn, state, FTConfig(ckpt_dir="/tmp/repro_train_lm",
+                                 ckpt_every=100),
+    )
+    t0 = time.time()
+    out = driver.run(batches(), args.steps)
+    losses = out["losses"]
+    k = max(len(losses) // 10, 1)
+    print(f"[train_lm] loss: first10={sum(losses[:k]) / k:.3f} "
+          f"last10={sum(losses[-k:]) / k:.3f} "
+          f"({(time.time() - t0) / max(len(losses), 1):.2f}s/step)")
+    assert losses[-1] < losses[0], "loss did not descend"
+    print("[train_lm] OK — loss descended on learnable bigram stream")
+
+
+if __name__ == "__main__":
+    main()

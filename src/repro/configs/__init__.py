@@ -1,0 +1,12 @@
+from repro.configs.base import ArchConfig, get_arch, list_archs, register
+from repro.configs.shapes import SHAPES, InputShape, get_shape
+
+__all__ = [
+    "ArchConfig",
+    "get_arch",
+    "list_archs",
+    "register",
+    "SHAPES",
+    "InputShape",
+    "get_shape",
+]

@@ -1,0 +1,33 @@
+"""deepseek-v2-lite-16b [moe] — MLA (kv_lora=512), 2 shared + 64 routed top-6.
+[arXiv:2405.04434; hf]
+
+Assignment line says "MoE 64e top-6" but repeats the 236B's "160 routed"
+comment; we follow the HF config: 64 routed experts (see DESIGN.md §8).
+Layer 0 is dense (d_ff=10944); MLA has no q compression in the lite model.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(
+    ArchConfig(
+        name="deepseek-v2-lite-16b",
+        family="moe",
+        n_layers=27,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=1408,           # per assignment: routed-expert hidden dim
+        vocab_size=102400,
+        attn_type="mla",
+        kv_lora_rank=512,
+        q_lora_rank=0,
+        qk_rope_head_dim=64,
+        qk_nope_head_dim=128,
+        v_head_dim=128,
+        n_routed_experts=64,
+        n_shared_experts=2,
+        moe_top_k=6,
+        moe_d_ff=1408,
+        first_dense_layers=1,
+        dense_d_ff=10944,
+    )
+)

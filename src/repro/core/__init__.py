@@ -1,0 +1,40 @@
+"""GOLDYLOC core: globally-optimized GEMM kernels + lightweight dynamic
+concurrency control, adapted to TPU (see DESIGN.md)."""
+from repro.core.cost_model import (
+    DEFAULT_SPEC,
+    RC_FRACTIONS,
+    TPUSpec,
+    group_time,
+    isolated_time,
+    kernel_stats,
+    sequential_time,
+    speedup_vs_sequential,
+)
+from repro.core.gemm_desc import GemmDesc
+from repro.core.library import GOLibrary, default_library
+from repro.core.predictor import (
+    CLASSES,
+    Predictor,
+    accuracy_by_available,
+    gemm_features,
+    generate_gemm_pool,
+    profile_dataset,
+    train_predictor,
+)
+from repro.core.scheduler import (
+    CP_OVERHEAD_S,
+    ConcurrencyController,
+    GemmRequest,
+    Schedule,
+)
+from repro.core.tuner import CDS, GOEntry, go_kernel_properties, tune_gemm
+
+__all__ = [
+    "DEFAULT_SPEC", "RC_FRACTIONS", "TPUSpec", "group_time", "isolated_time",
+    "kernel_stats", "sequential_time", "speedup_vs_sequential", "GemmDesc",
+    "GOLibrary", "default_library", "CLASSES", "Predictor",
+    "accuracy_by_available", "gemm_features", "generate_gemm_pool",
+    "profile_dataset", "train_predictor", "CP_OVERHEAD_S",
+    "ConcurrencyController", "GemmRequest", "Schedule", "CDS", "GOEntry",
+    "go_kernel_properties", "tune_gemm",
+]

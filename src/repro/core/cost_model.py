@@ -1,0 +1,202 @@
+"""Calibrated analytical TPU cost model.
+
+This is the measurement substrate for GOLDYLOC on a CPU-only container
+(DESIGN.md §2): kernel-grain latencies are derived from a three-term
+roofline over the *tile config*, with explicit modeling of the two
+mechanisms the paper shows drive concurrency behaviour:
+
+1. **HBM traffic vs tile shape** — blocked matmul re-reads panels
+   `tiles_n·M·K + tiles_m·K·N`; larger tiles ⇒ fewer re-reads (paper Fig. 4
+   Kernel-3).  If a GEMM's A row-panel (bm·K) fits in its VMEM *share*, the
+   kernel holds it resident and A is read once — losing residency when the
+   share shrinks at higher CD reproduces the paper's large-K contention
+   cliff (Fig. 5(b) ①).
+2. **Pipeline occupancy vs waves** — a TPU core pipelines tiles over DMA;
+   small GEMMs have fill/drain bubbles and per-launch overhead that
+   grouping amortizes (paper's "fewer waves ⇒ better overlap").
+
+Times are in seconds.  Absolute values are estimates; the paper's metrics
+are *ratios* (concurrent vs sequential), which are robust to the absolute
+calibration.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import Sequence
+
+from repro.core.gemm_desc import GemmDesc
+from repro.kernels.gemm.ops import TileConfig
+
+
+@dataclass(frozen=True)
+class TPUSpec:
+    """TPU v5e-class chip (targets in the assignment)."""
+
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12
+    peak_flops_fp32: float = 98.5e12
+    hbm_bw: float = 819e9            # B/s
+    vmem_bytes: int = 32 * 2**20     # usable per-core VMEM (v5e-class)
+    launch_overhead_s: float = 3e-6  # kernel dispatch
+    pipeline_fill_tiles: int = 2     # DMA double-buffer fill/drain depth
+    ici_bw: float = 50e9             # per-link, used by dist roofline
+    mxu_dim: int = 128
+
+    def peak(self, dtype: str) -> float:
+        return self.peak_flops_fp32 if dtype == "f32" else self.peak_flops_bf16
+
+    def scaled(self, frac: float) -> "TPUSpec":
+        """Resource-constrained variant (the paper's GPU/2, GPU/4)."""
+        return replace(
+            self,
+            name=f"{self.name}/{round(1 / frac)}" if frac != 1.0 else self.name,
+            vmem_bytes=int(self.vmem_bytes * frac),
+            hbm_bw=self.hbm_bw * frac,
+        )
+
+
+DEFAULT_SPEC = TPUSpec()
+RC_FRACTIONS = {"GPU": 1.0, "GPU/2": 0.5, "GPU/4": 0.25}
+
+
+@dataclass(frozen=True)
+class KernelStats:
+    """Per-(GEMM, tile) features — the paper's #WGs / occupancy / #waves."""
+
+    n_tiles: int          # = #WGs
+    waves: float          # pipeline waves (tiles / in-flight slots)
+    occupancy: float      # VMEM-utilization fraction of the budget used
+    vmem_bytes: int       # working set (dbl-buffered panels + acc)
+    hbm_bytes: float      # total traffic with panel-residency decision
+    flops: float          # padded (includes tile-edge waste)
+    mxu_util: float       # alignment efficiency
+    a_resident: bool      # A row-panel held in VMEM (traffic saver)
+
+
+def kernel_stats(
+    d: GemmDesc, t: TileConfig, vmem_budget: int | None = None,
+    spec: TPUSpec = DEFAULT_SPEC,
+) -> KernelStats:
+    budget = vmem_budget if vmem_budget is not None else spec.vmem_bytes
+    bm = min(t.bm, _round_up(d.M, spec.mxu_dim))
+    bn = min(t.bn, _round_up(d.N, spec.mxu_dim))
+    bk = min(t.bk, _round_up(d.K, spec.mxu_dim))
+    tm, tn, tk = _cdiv(d.M, bm), _cdiv(d.N, bn), _cdiv(d.K, bk)
+    n_tiles = tm * tn * d.batch
+
+    ws = TileConfig(bm, bn, bk).vmem_bytes(d.in_bytes)
+    # A row-panel residency: bm x K panel kept in VMEM across the j sweep.
+    # Partial fit ⇒ partial reuse (smooth, not a cliff): the resident
+    # fraction of the panel is re-read 1x, the rest tn x.
+    a_panel = bm * d.K * d.in_bytes
+    resid_frac = min(max((budget - ws) / max(a_panel, 1), 0.0), 1.0)
+    a_resident = resid_frac >= 1.0
+    eff_reads = tn - resid_frac * (tn - 1)
+    # Transposed storage streams with strided DMA — paper Fig. 5(b) ③'s
+    # layout effect; v5e DMA loses ~15% on the strided operand.
+    a_stream = 1 / 0.85 if d.ta else 1.0
+    b_stream = 1 / 0.85 if d.tb else 1.0
+    a_bytes = eff_reads * d.M * d.K * d.in_bytes * d.batch * a_stream
+    b_bytes = tm * d.K * d.N * d.in_bytes * d.batch * b_stream
+    c_bytes = d.M * d.N * d.in_bytes * d.batch
+    hbm = float(a_bytes + b_bytes + c_bytes)
+
+    # padded FLOPs (tile-edge waste)
+    flops = 2.0 * (tm * bm) * (tn * bn) * (tk * bk) * d.batch
+    util = (
+        _align_eff(bm, spec.mxu_dim)
+        * _align_eff(bn, spec.mxu_dim)
+        * _align_eff(bk, spec.mxu_dim)
+    )
+    slots = max(1, budget // max(ws, 1))
+    waves = n_tiles / min(slots, spec.pipeline_fill_tiles * 4)
+    occ = min(1.0, (ws + resid_frac * a_panel) / max(budget, 1))
+    return KernelStats(
+        n_tiles=n_tiles,
+        waves=waves,
+        occupancy=occ,
+        vmem_bytes=ws + (a_panel if a_resident else 0),
+        hbm_bytes=hbm,
+        flops=flops,
+        mxu_util=util,
+        a_resident=a_resident,
+    )
+
+
+def isolated_time(
+    d: GemmDesc, t: TileConfig, spec: TPUSpec = DEFAULT_SPEC,
+    vmem_budget: int | None = None, bw_frac: float = 1.0,
+) -> float:
+    """Modeled latency of one GEMM kernel run alone (one launch)."""
+    st = kernel_stats(d, t, vmem_budget, spec)
+    compute = st.flops / (spec.peak(d.dtype) * st.mxu_util)
+    memory = st.hbm_bytes / (spec.hbm_bw * bw_frac)
+    # fill/drain bubbles: first/last tiles can't overlap DMA with compute
+    per_tile_mem = st.hbm_bytes / max(st.n_tiles, 1) / (spec.hbm_bw * bw_frac)
+    ramp = spec.pipeline_fill_tiles * per_tile_mem
+    return max(compute, memory) + ramp + spec.launch_overhead_s
+
+
+def sequential_time(
+    members: Sequence[tuple[GemmDesc, TileConfig]],
+    spec: TPUSpec = DEFAULT_SPEC,
+) -> float:
+    return sum(isolated_time(d, t, spec) for d, t in members)
+
+
+def group_time(
+    members: Sequence[tuple[GemmDesc, TileConfig]],
+    spec: TPUSpec = DEFAULT_SPEC,
+) -> float:
+    """Modeled latency of one *grouped* launch executing all members.
+
+    Ideal grouped execution reaches the merged roofline
+    ``max(Σ compute_i, Σ memory_i)`` — bubbles of memory-bound members are
+    filled by compute-bound members' tiles.  The overlap degrades toward
+    serial execution as the aggregate working set overflows VMEM, and
+    overflowing also inflates traffic (panel-residency loss accounted per
+    member via the VMEM *share*).
+    """
+    G = len(members)
+    if G == 0:
+        return 0.0
+    share = spec.vmem_bytes // G
+    comps, mems, ramps = [], [], []
+    for d, t in members:
+        st = kernel_stats(d, t, vmem_budget=share, spec=spec)
+        comps.append(st.flops / (spec.peak(d.dtype) * st.mxu_util))
+        mems.append(st.hbm_bytes / spec.hbm_bw)
+        per_tile_mem = st.hbm_bytes / max(st.n_tiles, 1) / spec.hbm_bw
+        ramps.append(spec.pipeline_fill_tiles * per_tile_mem)
+    total_ws = sum(
+        kernel_stats(d, t, vmem_budget=share, spec=spec).vmem_bytes
+        for d, t in members
+    )
+    pressure = total_ws / spec.vmem_bytes
+    overlap = min(1.0, 1.0 / pressure) if pressure > 0 else 1.0
+    ideal = max(sum(comps), sum(mems))
+    serial = sum(max(c, m) for c, m in zip(comps, mems))
+    t_exec = overlap * ideal + (1.0 - overlap) * (
+        serial * (1.0 + 0.25 * max(0.0, pressure - 1.0))
+    )
+    return t_exec + max(ramps) + spec.launch_overhead_s
+
+
+def speedup_vs_sequential(
+    members: Sequence[tuple[GemmDesc, TileConfig]],
+    spec: TPUSpec = DEFAULT_SPEC,
+) -> float:
+    return sequential_time(members, spec) / group_time(members, spec)
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _round_up(a: int, b: int) -> int:
+    return _cdiv(a, b) * b
+
+
+def _align_eff(dim: int, mxu: int) -> float:
+    return dim / (_cdiv(dim, mxu) * mxu)

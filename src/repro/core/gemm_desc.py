@@ -1,0 +1,64 @@
+"""GEMM descriptors — the unit GOLDYLOC tunes, predicts, and schedules."""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import jax.numpy as jnp
+
+DTYPE_BYTES = {"bf16": 2, "f32": 4, "f16": 2}
+
+
+@dataclass(frozen=True, order=True)
+class GemmDesc:
+    """A GEMM input in the paper's M_N_K_T1_T2 notation (+ dtype).
+
+    C[M,N] = op(A) @ op(B); T1/T2 flag transposed *storage* of A/B
+    (paper Fig. 1(b): B is stored (N,K), i.e. T2=1, in their default).
+    """
+
+    M: int
+    N: int
+    K: int
+    ta: bool = False
+    tb: bool = False
+    dtype: str = "bf16"
+    batch: int = 1  # strided batched-GEMM count (B-GEMM §6.7); 1 = plain
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.M * self.N * self.K * self.batch
+
+    @property
+    def in_bytes(self) -> int:
+        return DTYPE_BYTES[self.dtype]
+
+    @property
+    def output_size(self) -> int:
+        return self.M * self.N
+
+    @property
+    def ops_per_byte(self) -> float:
+        bytes_ = (self.M * self.K + self.K * self.N + self.M * self.N)
+        return self.flops / (bytes_ * self.in_bytes * self.batch)
+
+    def key(self) -> str:
+        t = f"{int(self.ta)}{int(self.tb)}"
+        b = f"_b{self.batch}" if self.batch != 1 else ""
+        return f"{self.M}_{self.N}_{self.K}_{t}_{self.dtype}{b}"
+
+    @staticmethod
+    def from_key(key: str) -> "GemmDesc":
+        parts = key.split("_")
+        M, N, K = int(parts[0]), int(parts[1]), int(parts[2])
+        ta, tb = parts[3][0] == "1", parts[3][1] == "1"
+        dtype = parts[4]
+        batch = int(parts[5][1:]) if len(parts) > 5 else 1
+        return GemmDesc(M, N, K, ta, tb, dtype, batch)
+
+    def jnp_dtype(self):
+        return {"bf16": jnp.bfloat16, "f32": jnp.float32, "f16": jnp.float16}[
+            self.dtype
+        ]
+
+    def with_batch(self, b: int) -> "GemmDesc":
+        return replace(self, batch=b)

@@ -1,0 +1,103 @@
+"""GO GEMM library — paper §4.2.2.
+
+The baseline library maps a GEMM input to its isolated-tuned kernel; the GO
+library additionally returns, per concurrency degree, a pointer to the
+globally-optimized kernel (our TileConfig ↔ the paper's kernel object).
+JSON-persistent so the one-time tuning cost is amortized, exactly like a
+vendor BLAS tuning cache.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Optional
+
+from repro.core.cost_model import DEFAULT_SPEC, TPUSpec
+from repro.core.gemm_desc import GemmDesc
+from repro.core.tuner import CDS, GOEntry, tune_gemm
+from repro.kernels.gemm.ops import TileConfig
+
+
+def _tile_to_list(t: TileConfig) -> list[int]:
+    return [t.bm, t.bn, t.bk]
+
+
+def _tile_from_list(v) -> TileConfig:
+    return TileConfig(*v)
+
+
+class GOLibrary:
+    """Thread-safe, lazily-tuned, optionally disk-backed kernel library."""
+
+    def __init__(
+        self,
+        path: str | os.PathLike | None = None,
+        spec: TPUSpec = DEFAULT_SPEC,
+    ):
+        self.path = Path(path) if path else None
+        self.spec = spec
+        self._entries: Dict[str, GOEntry] = {}
+        self._lock = threading.Lock()
+        if self.path and self.path.exists():
+            self.load(self.path)
+
+    # -------------------------------------------------------------- access
+    def get(self, desc: GemmDesc) -> GOEntry:
+        key = desc.key()
+        with self._lock:
+            e = self._entries.get(key)
+        if e is not None:
+            return e
+        e = tune_gemm(desc, self.spec)
+        with self._lock:
+            self._entries.setdefault(key, e)
+        return self._entries[key]
+
+    def tile(self, desc: GemmDesc, cd: int = 1) -> TileConfig:
+        return self.get(desc).tile_for_cd(cd)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def entries(self) -> Dict[str, GOEntry]:
+        return dict(self._entries)
+
+    # ----------------------------------------------------------- persist
+    def save(self, path: str | os.PathLike | None = None) -> None:
+        path = Path(path or self.path)
+        blob = {
+            k: {
+                "isolated": _tile_to_list(e.isolated),
+                "go": {str(cd): _tile_to_list(t) for cd, t in e.go.items()},
+                "rc_source": e.rc_source,
+                "speedup": {str(cd): s for cd, s in e.speedup.items()},
+            }
+            for k, e in self._entries.items()
+        }
+        tmp = path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(blob, indent=1))
+        tmp.replace(path)
+
+    def load(self, path: str | os.PathLike) -> None:
+        blob = json.loads(Path(path).read_text())
+        for k, v in blob.items():
+            self._entries[k] = GOEntry(
+                desc_key=k,
+                isolated=_tile_from_list(v["isolated"]),
+                go={int(cd): _tile_from_list(t) for cd, t in v["go"].items()},
+                rc_source={int(c): s for c, s in v.get("rc_source", {}).items()},
+                speedup={int(c): s for c, s in v.get("speedup", {}).items()},
+            )
+
+
+_DEFAULT: Optional[GOLibrary] = None
+
+
+def default_library() -> GOLibrary:
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = GOLibrary()
+    return _DEFAULT

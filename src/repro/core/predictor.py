@@ -1,0 +1,200 @@
+"""Lightweight dynamic concurrency predictor — paper §4.3.
+
+Multi-class (one-vs-rest softmax) logistic regression in pure JAX:
+    P = softmax(X @ W);  CD_exec = min(argmax P, available GEMMs)
+Classes: {1S, 2P, 4P, 8P, 16P}.  Features (paper Fig. 7b): GEMM dims
+(M, N, K) + per-CD kernel features (#WGs, occupancy, #waves) of the GO
+kernels — capturing input, implementation, and hardware properties.
+Min-max normalized; trained offline once per chip spec on a profiled
+dataset of 1072 GEMMs (paper §5.2 count), 90/10 split.
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost_model import DEFAULT_SPEC, TPUSpec, kernel_stats
+from repro.core.gemm_desc import GemmDesc
+from repro.core.library import GOLibrary
+from repro.core.tuner import CDS
+
+CLASSES = (1,) + tuple(CDS)  # 1S, 2P, 4P, 8P, 16P
+
+
+def gemm_features(
+    desc: GemmDesc, lib: GOLibrary, spec: TPUSpec = DEFAULT_SPEC
+) -> np.ndarray:
+    """15-dim feature vector: log2(M,N,K) + per-CD (log2 #WGs, occ, log2 waves)."""
+    entry = lib.get(desc)
+    feats = [math.log2(desc.M), math.log2(desc.N), math.log2(desc.K)]
+    for cd in CDS:
+        st = kernel_stats(
+            desc, entry.tile_for_cd(cd), vmem_budget=spec.vmem_bytes // cd,
+            spec=spec,
+        )
+        feats += [
+            math.log2(max(st.n_tiles, 1)),
+            st.occupancy,
+            math.log2(max(st.waves, 1e-6)),
+        ]
+    return np.asarray(feats, np.float32)
+
+
+@dataclass
+class Predictor:
+    W: np.ndarray          # (F+1, C)
+    f_min: np.ndarray      # (F,)
+    f_max: np.ndarray      # (F,)
+
+    # ---------------------------------------------------------------- api
+    def _norm(self, X: np.ndarray) -> np.ndarray:
+        span = np.where(self.f_max > self.f_min, self.f_max - self.f_min, 1.0)
+        Xn = (X - self.f_min) / span
+        ones = np.ones((*Xn.shape[:-1], 1), Xn.dtype)
+        return np.concatenate([Xn, ones], axis=-1)
+
+    def probabilities(self, X: np.ndarray) -> np.ndarray:
+        logits = self._norm(np.atleast_2d(X)) @ self.W
+        z = logits - logits.max(-1, keepdims=True)
+        e = np.exp(z)
+        return e / e.sum(-1, keepdims=True)
+
+    def predict_cd(self, X: np.ndarray, available: int = 16) -> np.ndarray:
+        """Paper Fig. 8: CD = min(argmax P, available)."""
+        p = self.probabilities(X)
+        cd = np.asarray(CLASSES)[p.argmax(-1)]
+        return np.minimum(cd, _floor_class(available))
+
+    # ------------------------------------------------------------ persist
+    def save(self, path) -> None:
+        Path(path).write_text(
+            json.dumps(
+                {
+                    "W": self.W.tolist(),
+                    "f_min": self.f_min.tolist(),
+                    "f_max": self.f_max.tolist(),
+                }
+            )
+        )
+
+    @staticmethod
+    def load(path) -> "Predictor":
+        d = json.loads(Path(path).read_text())
+        return Predictor(
+            np.asarray(d["W"], np.float32),
+            np.asarray(d["f_min"], np.float32),
+            np.asarray(d["f_max"], np.float32),
+        )
+
+
+def _floor_class(avail: int) -> int:
+    return max(c for c in CLASSES if c <= max(avail, 1))
+
+
+# ---------------------------------------------------------------- training
+def train_predictor(
+    X: np.ndarray,
+    y: np.ndarray,  # class indices into CLASSES
+    *,
+    epochs: int = 600,
+    lr: float = 0.15,
+    l2: float = 1e-4,
+    seed: int = 0,
+) -> Predictor:
+    f_min, f_max = X.min(0), X.max(0)
+    span = np.where(f_max > f_min, f_max - f_min, 1.0)
+    Xn = (X - f_min) / span
+    Xn = np.concatenate([Xn, np.ones((len(Xn), 1), np.float32)], 1)
+    C = len(CLASSES)
+    Xd, yd = jnp.asarray(Xn), jnp.asarray(y)
+
+    def loss_fn(W):
+        logits = Xd @ W
+        lp = jax.nn.log_softmax(logits, -1)
+        nll = -lp[jnp.arange(len(yd)), yd].mean()
+        return nll + l2 * (W**2).sum()
+
+    W = 0.01 * jax.random.normal(
+        jax.random.PRNGKey(seed), (Xn.shape[1], C), jnp.float32
+    )
+    # Adam (pure JAX)
+    m = jnp.zeros_like(W)
+    v = jnp.zeros_like(W)
+    grad = jax.jit(jax.grad(loss_fn))
+
+    @jax.jit
+    def step(carry, i):
+        W, m, v = carry
+        g = grad(W)
+        m = 0.9 * m + 0.1 * g
+        v = 0.999 * v + 0.001 * g * g
+        mh = m / (1 - 0.9 ** (i + 1))
+        vh = v / (1 - 0.999 ** (i + 1))
+        W = W - lr * mh / (jnp.sqrt(vh) + 1e-8)
+        return (W, m, v), None
+
+    (W, _, _), _ = jax.lax.scan(step, (W, m, v), jnp.arange(epochs))
+    return Predictor(np.asarray(W), f_min.astype(np.float32), f_max.astype(np.float32))
+
+
+# ------------------------------------------------------------- the dataset
+def profile_dataset(
+    descs: Sequence[GemmDesc],
+    lib: GOLibrary,
+    spec: TPUSpec = DEFAULT_SPEC,
+    threshold: float = 1.05,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Offline profiling (paper Fig. 7b): features ↦ preferred CD."""
+    X, y = [], []
+    for d in descs:
+        e = lib.get(d)
+        X.append(gemm_features(d, lib, spec))
+        y.append(CLASSES.index(e.preferred_cd(threshold)))
+    return np.stack(X), np.asarray(y, np.int32)
+
+
+def generate_gemm_pool(n: int = 1072, seed: int = 17) -> list[GemmDesc]:
+    """GEMM pool matching the paper's ranges (§5.2): output 32K–168M,
+    K 64–20K, both precisions, all transpose combos."""
+    rng = np.random.default_rng(seed)
+    descs: list[GemmDesc] = []
+    sizes = [32, 64, 128, 256, 384, 512, 768, 1024, 1600, 2048, 3072, 4096,
+             5120, 8192, 12288, 16384]
+    ks = [64, 128, 256, 512, 768, 1024, 2048, 3072, 4096, 5120, 8192, 12288,
+          16384, 20480]
+    seen = set()
+    while len(descs) < n:
+        M = int(rng.choice(sizes))
+        N = int(rng.choice(sizes))
+        if not (32_768 <= M * N <= 168_000_000):
+            continue
+        K = int(rng.choice(ks))
+        ta, tb = bool(rng.integers(2)), bool(rng.integers(2))
+        dtype = "bf16" if rng.random() < 0.5 else "f32"
+        d = GemmDesc(M, N, K, ta, tb, dtype)
+        if d.key() in seen:
+            continue
+        seen.add(d.key())
+        descs.append(d)
+    return descs
+
+
+def accuracy_by_available(
+    pred: Predictor, X: np.ndarray, y: np.ndarray
+) -> dict[int, float]:
+    """Paper §6.6: accuracy for 2/4/8/16 available GEMMs — a prediction is
+    correct when min(pred, avail) == min(label, avail)."""
+    out = {}
+    ytrue = np.asarray(CLASSES)[y]
+    for avail in (2, 4, 8, 16):
+        p = pred.predict_cd(X, available=avail)
+        t = np.minimum(ytrue, avail)
+        out[avail] = float((p == t).mean())
+    return out

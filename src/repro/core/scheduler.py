@@ -1,0 +1,211 @@
+"""Dynamic concurrency controller — the GPU command processor (CP) analogue
+(paper §4.4), re-expressed for TPU dispatch (DESIGN.md §2).
+
+At dispatch time the controller inspects the pending-GEMM queue (the
+analogue of the CP reading kernel packets at queue heads), extracts the
+features of the head GEMMs, runs the logistic predictor, and emits grouped
+`pallas_call`s with the GO tile config for the chosen concurrency degree:
+
+    CD_exec = min(CD_predicted, #available compatible GEMMs)
+
+Heterogeneous queues follow §6.7: GEMMs are partitioned into compatibility
+classes; two unique GEMMs execute fully-concurrently only if *both* prefer
+that CD, otherwise they are split into homogeneous sub-groups.
+
+The controller also implements the fusion-vs-concurrency policy (§6.11):
+shared-input GEMMs (QKV) may be fused into one wide GEMM instead of grouped,
+whichever the cost model favours.
+
+`plan()` is pure logic (unit-testable, used by every benchmark);
+`execute()` runs the plan through the real kernels.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost_model import (
+    DEFAULT_SPEC,
+    TPUSpec,
+    group_time,
+    isolated_time,
+    sequential_time,
+)
+from repro.core.gemm_desc import GemmDesc
+from repro.core.library import GOLibrary, default_library
+from repro.core.predictor import CLASSES, Predictor, gemm_features
+from repro.kernels.gemm.ops import TileConfig, gemm
+from repro.kernels.grouped_gemm import grouped_gemm, ragged_gemm
+
+# CP overhead (paper §5.4/§6.5): queue inspect + predict + packet rewrite.
+CP_OVERHEAD_S = 8e-6
+
+
+@dataclass
+class GemmRequest:
+    desc: GemmDesc
+    a: Optional[jax.Array] = None
+    b: Optional[jax.Array] = None
+    tag: str = ""
+
+
+@dataclass
+class GroupPlan:
+    indices: List[int]            # queue positions executed in this launch
+    cd: int                       # concurrency degree of the launch
+    tile: TileConfig
+    mode: str                     # "grouped" | "ragged" | "single" | "fused"
+    modeled_time_s: float
+
+
+@dataclass
+class Schedule:
+    groups: List[GroupPlan] = field(default_factory=list)
+    cp_overhead_s: float = 0.0
+
+    @property
+    def modeled_time_s(self) -> float:
+        return sum(g.modeled_time_s for g in self.groups)
+
+
+def _compatible(a: GemmDesc, b: GemmDesc) -> bool:
+    """Groupable in one ragged launch: same K/N/transposes/dtype, any M."""
+    return (
+        a.N == b.N and a.K == b.K and a.ta == b.ta and a.tb == b.tb
+        and a.dtype == b.dtype and a.batch == b.batch == 1
+    )
+
+
+class ConcurrencyController:
+    def __init__(
+        self,
+        library: GOLibrary | None = None,
+        predictor: Predictor | None = None,
+        spec: TPUSpec = DEFAULT_SPEC,
+        max_cd: int = 16,
+    ):
+        self.lib = library or default_library()
+        self.predictor = predictor
+        self.spec = spec
+        self.max_cd = max_cd
+
+    # ------------------------------------------------------------ predict
+    def preferred_cd(self, desc: GemmDesc, available: int) -> int:
+        if available <= 1:
+            return 1
+        if self.predictor is not None:
+            x = gemm_features(desc, self.lib, self.spec)
+            return int(self.predictor.predict_cd(x, available=available)[0])
+        # Oracle fallback: modeled preferred CD from the GO library.
+        cd = self.lib.get(desc).preferred_cd()
+        return min(cd, max(c for c in CLASSES if c <= max(available, 1)))
+
+    # --------------------------------------------------------------- plan
+    def plan(self, descs: Sequence[GemmDesc]) -> Schedule:
+        sched = Schedule(cp_overhead_s=CP_OVERHEAD_S)
+        pending = list(range(len(descs)))
+        while pending:
+            head = descs[pending[0]]
+            same = [i for i in pending if descs[i] == head]
+            compat = [i for i in pending if _compatible(descs[i], head)]
+            pool = same if len(same) >= len(compat) else compat
+            hetero = pool is compat and len(compat) > len(same)
+
+            cd = self.preferred_cd(head, available=min(len(pool), self.max_cd))
+            if hetero:
+                # §6.7: every unique member must prefer this CD, else split
+                # into the homogeneous subset.
+                uniq = {descs[i].key(): descs[i] for i in pool}
+                if not all(
+                    self.preferred_cd(u, available=cd) >= cd
+                    for u in uniq.values()
+                ):
+                    pool, hetero = same, False
+                    cd = self.preferred_cd(head, available=min(len(pool), self.max_cd))
+
+            take = pool[: max(cd, 1)]
+            cd_exec = len(take)
+            tile = self.lib.get(head).tile_for_cd(cd_exec)
+            members = [(descs[i], tile) for i in take]
+            if cd_exec == 1:
+                mode = "single"
+                t = isolated_time(head, self.lib.get(head).isolated, self.spec)
+                tile = self.lib.get(head).isolated
+            else:
+                mode = "ragged" if hetero else "grouped"
+                t = group_time(members, self.spec)
+            sched.groups.append(
+                GroupPlan(indices=take, cd=cd_exec, tile=tile, mode=mode,
+                          modeled_time_s=t)
+            )
+            pending = [i for i in pending if i not in set(take)]
+        return sched
+
+    # ---------------------------------------------------- fusion policy
+    def plan_shared_input(
+        self, descs: Sequence[GemmDesc]
+    ) -> tuple[str, float, float]:
+        """§6.11 QKV policy: GEMMs sharing A and K — fuse vs group.
+
+        Returns (choice, fused_time, grouped_time)."""
+        head = descs[0]
+        fused_desc = replace(head, N=sum(d.N for d in descs))
+        fused_tile = self.lib.get(fused_desc).isolated
+        t_fused = isolated_time(fused_desc, fused_tile, self.spec)
+        t_group = self.plan(descs).modeled_time_s
+        return ("fuse" if t_fused <= t_group else "group", t_fused, t_group)
+
+    # ------------------------------------------------------------ execute
+    def execute(
+        self, requests: Sequence[GemmRequest], interpret: bool | None = None
+    ) -> List[jax.Array]:
+        descs = [r.desc for r in requests]
+        sched = self.plan(descs)
+        outs: List[Optional[jax.Array]] = [None] * len(requests)
+        for gp in sched.groups:
+            reqs = [requests[i] for i in gp.indices]
+            if gp.mode == "single" or len(reqs) == 1:
+                r = reqs[0]
+                outs[gp.indices[0]] = gemm(
+                    r.a, r.b, ta=r.desc.ta, tb=r.desc.tb, tile=gp.tile,
+                    interpret=interpret,
+                )
+            elif gp.mode == "grouped":
+                a = jnp.stack([_as_mk(r) for r in reqs])
+                b = jnp.stack([_as_kn(r) for r in reqs])
+                res = grouped_gemm(a, b, tile=gp.tile, interpret=interpret)
+                for j, i in enumerate(gp.indices):
+                    outs[i] = res[j]
+            else:  # ragged
+                bm = gp.tile.bm
+                rows, sizes = [], []
+                for r in reqs:
+                    m = _as_mk(r)
+                    pad = (-m.shape[0]) % bm
+                    if pad:
+                        m = jnp.pad(m, ((0, pad), (0, 0)))
+                    rows.append(m)
+                    sizes.append(m.shape[0])
+                a = jnp.concatenate(rows)
+                b = jnp.stack([_as_kn(r) for r in reqs])
+                res = ragged_gemm(
+                    a, b, jnp.asarray(sizes, jnp.int32), tile=gp.tile,
+                    interpret=interpret,
+                )
+                off = 0
+                for j, i in enumerate(gp.indices):
+                    outs[i] = res[off : off + requests[i].desc.M]
+                    off += sizes[j]
+        return outs  # type: ignore[return-value]
+
+
+def _as_mk(r: GemmRequest) -> jax.Array:
+    return r.a.T if r.desc.ta else r.a
+
+
+def _as_kn(r: GemmRequest) -> jax.Array:
+    return r.b.T if r.desc.tb else r.b

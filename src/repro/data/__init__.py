@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataLoader, input_specs, make_batch
+
+__all__ = ["DataLoader", "input_specs", "make_batch"]

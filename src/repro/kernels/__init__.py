@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package contains:
+  kernel.py -- ``pl.pallas_call`` body with explicit BlockSpec VMEM tiling
+  ops.py    -- jit'd public wrapper (padding, dtype, transposes, custom_vjp)
+  ref.py    -- pure-jnp oracle used by tests and as the CPU/dry-run path
+
+On this CPU container kernels are validated with ``interpret=True``;
+``repro.kernels.dispatch`` selects pallas-vs-reference per backend.
+"""
+from repro.kernels.dispatch import use_pallas
+
+__all__ = ["use_pallas"]

@@ -1,0 +1,69 @@
+"""Public flash-attention op.
+
+Forward = pallas kernel (TPU / interpret), backward = VJP of the chunked
+reference (numerically matched: both use online softmax in f32).  Off-TPU the
+chunked reference runs both directions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dispatch import interpret_mode, use_pallas
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, window, scale, q_offset, interpret):
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, scale=scale,
+        q_offset=q_offset, interpret=interpret,
+    )
+
+
+def _flash_fwd(q, k, v, causal, window, scale, q_offset, interpret):
+    out = _flash(q, k, v, causal, window, scale, q_offset, interpret)
+    return out, (q, k, v)
+
+
+def _flash_bwd(causal, window, scale, q_offset, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: flash_ref(
+            q, k, v, causal=causal, window=window, scale=scale,
+            q_offset=q_offset,
+        ),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(
+    q, k, v,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+    q_offset: int = 0,
+    interpret: bool | None = None,
+    force_ref: bool = False,
+):
+    interp = bool(interpret)  # None → ref path off-TPU, pallas on TPU
+    if force_ref or not (use_pallas() or interp):
+        return flash_ref(
+            q, k, v, causal=causal, window=window, scale=scale,
+            q_offset=q_offset,
+        )
+    if v.shape[-1] != q.shape[-1]:
+        # MLA-style dv != dqk: zero-pad V, slice the output.
+        dv, dq = v.shape[-1], q.shape[-1]
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dq - dv)))
+        out = _flash(q, k, v, causal, window, scale, q_offset, interp)
+        return out[..., :dv]
+    return _flash(q, k, v, causal, window, scale, q_offset, interp)

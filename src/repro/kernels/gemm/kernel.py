@@ -1,0 +1,96 @@
+"""Tiled GEMM Pallas kernel with an explicitly tunable BlockSpec tiling.
+
+This is the object of GOLDYLOC's tuning: the (bm, bn, bk) tile config decides
+VMEM working set (the TPU analogue of LDS+occupancy), HBM traffic (the
+paper's "global memory requests"), and wave count (#grid tiles / pipeline
+slots).  The isolated-tuned and GO (resource-constrained) variants of a GEMM
+are *this same kernel* instantiated with different TileConfigs.
+
+Grid = (m_tiles, n_tiles, k_tiles); k is the innermost, sequential
+("arbitrary") dimension accumulating into an f32 VMEM scratch tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, c_ref, acc_ref, *, n_k: int, ta: bool, tb: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    if ta:
+        a = a.T  # stored (bk, bm) -> (bm, bk)
+    if tb:
+        b = b.T  # stored (bn, bk) -> (bk, bn)
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        c_ref[...] = acc_ref[...].astype(c_ref.dtype)
+
+
+def matmul_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    ta: bool,
+    tb: bool,
+    bm: int,
+    bn: int,
+    bk: int,
+    out_dtype,
+    interpret: bool = False,
+):
+    """C[M,N] = op(a) @ op(b).
+
+    Storage shapes: ``a`` is (M,K), or (K,M) when ``ta``; ``b`` is (K,N), or
+    (N,K) when ``tb`` (the paper's default B layout).  All dims must already
+    be padded to tile multiples (ops.py does this).
+    """
+    if ta:
+        K, M = a.shape
+    else:
+        M, K = a.shape
+    if tb:
+        N, Kb = b.shape
+    else:
+        Kb, N = b.shape
+    assert K == Kb, (a.shape, b.shape, ta, tb)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    n_m, n_n, n_k = M // bm, N // bn, K // bk
+
+    a_spec = (
+        pl.BlockSpec((bk, bm), lambda i, j, k: (k, i))
+        if ta
+        else pl.BlockSpec((bm, bk), lambda i, j, k: (i, k))
+    )
+    b_spec = (
+        pl.BlockSpec((bn, bk), lambda i, j, k: (j, k))
+        if tb
+        else pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))
+    )
+
+    kernel = functools.partial(_matmul_kernel, n_k=n_k, ta=ta, tb=tb)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_m, n_n, n_k),
+        in_specs=[a_spec, b_spec],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name=f"goldyloc_gemm_{bm}x{bn}x{bk}",
+    )(a, b)

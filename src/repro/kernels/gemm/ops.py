@@ -1,0 +1,111 @@
+"""Public GEMM op: padding, tile-config plumbing, custom VJP.
+
+The VJP matters to GOLDYLOC: a GEMM's backward pass is two *independent*
+GEMMs (dgrad, wgrad — paper Fig. 2 ⑥).  We express them as two calls of this
+same op so the concurrency controller can group them.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dispatch import interpret_mode, use_pallas
+from repro.kernels.gemm.kernel import matmul_pallas
+from repro.kernels.gemm.ref import gemm_ref
+
+
+@dataclass(frozen=True, order=True)
+class TileConfig:
+    """BlockSpec tiling — the tunable kernel 'implementation' of the paper."""
+
+    bm: int = 256
+    bn: int = 256
+    bk: int = 256
+
+    def vmem_bytes(self, in_bytes: int = 2, acc_bytes: int = 4) -> int:
+        """Working set: double-buffered A/B tiles + f32 accumulator + C out."""
+        ab = 2 * (self.bm * self.bk + self.bk * self.bn) * in_bytes
+        acc = self.bm * self.bn * acc_bytes
+        out = self.bm * self.bn * in_bytes
+        return ab + acc + out
+
+    def key(self) -> str:
+        return f"{self.bm}x{self.bn}x{self.bk}"
+
+
+def _pad_to(x: jax.Array, multiples: tuple[int, int]) -> jax.Array:
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, multiples)]
+    if any(p[1] for p in pads):
+        x = jnp.pad(x, pads)
+    return x
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7))
+def _gemm(a, b, ta, tb, tile, out_dtype, interpret, force_ref):
+    if force_ref or not (use_pallas() or interpret):
+        return gemm_ref(a, b, ta=ta, tb=tb, out_dtype=out_dtype)
+    M = a.shape[1] if ta else a.shape[0]
+    N = b.shape[0] if tb else b.shape[1]
+    a_p = _pad_to(a, (tile.bk, tile.bm) if ta else (tile.bm, tile.bk))
+    b_p = _pad_to(b, (tile.bn, tile.bk) if tb else (tile.bk, tile.bn))
+    out = matmul_pallas(
+        a_p,
+        b_p,
+        ta=ta,
+        tb=tb,
+        bm=tile.bm,
+        bn=tile.bn,
+        bk=tile.bk,
+        out_dtype=out_dtype,
+        interpret=interpret,
+    )
+    if out.shape != (M, N):
+        out = out[:M, :N]
+    return out
+
+
+def _gemm_fwd(a, b, ta, tb, tile, out_dtype, interpret, force_ref):
+    out = _gemm(a, b, ta, tb, tile, out_dtype, interpret, force_ref)
+    return out, (a, b)
+
+
+def _gemm_bwd(ta, tb, tile, out_dtype, interpret, force_ref, res, g):
+    a, b = res
+    g = g.astype(a.dtype)
+    # dgrad / wgrad: two independent GEMMs (groupable by the controller).
+    if not ta:
+        da = _gemm(g, b, False, not tb, tile, a.dtype, interpret, force_ref)
+    else:
+        da = _gemm(b, g, tb, True, tile, a.dtype, interpret, force_ref)
+    if not tb:
+        db = _gemm(a, g, not ta, False, tile, b.dtype, interpret, force_ref)
+    else:
+        db = _gemm(g, a, True, ta, tile, b.dtype, interpret, force_ref)
+    return da, db
+
+
+_gemm.defvjp(_gemm_fwd, _gemm_bwd)
+
+
+def gemm(
+    a,
+    b,
+    *,
+    ta: bool = False,
+    tb: bool = False,
+    tile: TileConfig = TileConfig(),
+    out_dtype=None,
+    interpret: bool | None = None,
+    force_ref: bool = False,
+):
+    """C = op(a) @ op(b) with a tunable Pallas tile config.
+
+    ``interpret=None`` resolves to interpret-mode when off-TPU; ``force_ref``
+    pins the XLA reference path (used by the multi-pod dry-run).
+    """
+    out_dtype = out_dtype or a.dtype
+    interp = bool(interpret)  # None → ref path off-TPU, pallas on TPU
+    return _gemm(a, b, ta, tb, tile, out_dtype, interp, force_ref)

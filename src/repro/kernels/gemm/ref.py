@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the tiled GEMM kernel (f32 accumulation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(a, b, *, ta: bool = False, tb: bool = False, out_dtype=None):
+    out_dtype = out_dtype or a.dtype
+    a_ = a.T if ta else a
+    b_ = b.T if tb else b
+    return jnp.dot(a_, b_, preferred_element_type=jnp.float32).astype(out_dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.grouped_gemm.ops import grouped_gemm, ragged_gemm
+from repro.kernels.grouped_gemm.ref import grouped_gemm_ref, ragged_gemm_ref
+
+__all__ = ["grouped_gemm", "ragged_gemm", "grouped_gemm_ref", "ragged_gemm_ref"]

@@ -1,0 +1,87 @@
+"""Public grouped/ragged GEMM ops.
+
+``grouped_gemm`` executes a concurrency group of G homogeneous GEMMs at the
+tile config the GO-library selected for CD=G.  ``ragged_gemm`` is the
+heterogeneous/MoE form: per-group row counts, shared N/K.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dispatch import interpret_mode, use_pallas
+from repro.kernels.gemm.ops import TileConfig, _pad_to
+from repro.kernels.grouped_gemm.kernel import (
+    grouped_matmul_pallas,
+    ragged_matmul_pallas,
+)
+from repro.kernels.grouped_gemm.ref import grouped_gemm_ref, ragged_gemm_ref
+
+
+def grouped_gemm(
+    a: jax.Array,  # (G, M, K)
+    b: jax.Array,  # (G, K, N)
+    *,
+    tile: TileConfig = TileConfig(),
+    out_dtype=None,
+    interpret: bool | None = None,
+    force_ref: bool = False,
+):
+    out_dtype = out_dtype or a.dtype
+    interp = bool(interpret)  # None → ref path off-TPU, pallas on TPU
+    if force_ref or not (use_pallas() or interp):
+        return grouped_gemm_ref(a, b, out_dtype=out_dtype)
+    G, M, K = a.shape
+    N = b.shape[2]
+    a_p = jnp.pad(
+        a, ((0, 0), (0, (-M) % tile.bm), (0, (-K) % tile.bk))
+    ) if (M % tile.bm or K % tile.bk) else a
+    b_p = jnp.pad(
+        b, ((0, 0), (0, (-K) % tile.bk), (0, (-N) % tile.bn))
+    ) if (K % tile.bk or N % tile.bn) else b
+    out = grouped_matmul_pallas(
+        a_p, b_p, bm=tile.bm, bn=tile.bn, bk=tile.bk,
+        out_dtype=out_dtype, interpret=interp,
+    )
+    return out[:, :M, :N]
+
+
+def ragged_gemm(
+    a: jax.Array,            # (Mtotal, K) rows grouped & bm-padded per group
+    b: jax.Array,            # (G, K, N)
+    group_sizes: jax.Array,  # (G,) int32 — row count per group (pre-padding
+                             #   already applied by the caller: each multiple
+                             #   of tile.bm for the pallas path)
+    *,
+    tile: TileConfig = TileConfig(),
+    out_dtype=None,
+    interpret: bool | None = None,
+    force_ref: bool = False,
+):
+    out_dtype = out_dtype or a.dtype
+    interp = bool(interpret)  # None → ref path off-TPU, pallas on TPU
+    if force_ref or not (use_pallas() or interp):
+        return ragged_gemm_ref(a, b, group_sizes, out_dtype=out_dtype)
+    Mtotal, K = a.shape
+    G, _, N = b.shape
+    # Block→group map from group sizes (sizes must be bm multiples here).
+    mb = tile.bm
+    n_blocks = Mtotal // mb
+    offsets = jnp.cumsum(group_sizes)
+    block_row = jnp.arange(n_blocks, dtype=jnp.int32) * mb
+    block_group = jnp.minimum(
+        jnp.searchsorted(offsets, block_row, side="right").astype(jnp.int32),
+        G - 1,
+    )
+    a_p = _pad_to(a, (mb, tile.bk))
+    b_p = (
+        jnp.pad(b, ((0, 0), (0, (-K) % tile.bk), (0, (-N) % tile.bn)))
+        if (K % tile.bk or N % tile.bn)
+        else b
+    )
+    out = ragged_matmul_pallas(
+        a_p, b_p, block_group,
+        bm=tile.bm, bn=tile.bn, bk=tile.bk,
+        out_dtype=out_dtype, interpret=interp,
+    )
+    return out[:Mtotal, :N]

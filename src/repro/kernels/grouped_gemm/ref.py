@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for grouped / ragged GEMM."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_gemm_ref(a, b, *, out_dtype=None):
+    """(G,M,K) x (G,K,N) -> (G,M,N), f32 accumulation."""
+    out_dtype = out_dtype or a.dtype
+    return jnp.einsum(
+        "gmk,gkn->gmn", a, b, preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+def ragged_gemm_ref(a, b, group_sizes, *, out_dtype=None):
+    """Rows of ``a`` (Mtotal, K) belong to groups of ``group_sizes`` (G,) in
+    order; each group multiplies its own ``b[g]`` (K, N)."""
+    out_dtype = out_dtype or a.dtype
+    G = b.shape[0]
+    # group id per row: counts -> segment ids (jit-safe: Mtotal static)
+    offsets = jnp.cumsum(group_sizes)
+    row_ids = jnp.arange(a.shape[0])
+    gid = jnp.searchsorted(offsets, row_ids, side="right")
+    gid = jnp.minimum(gid, G - 1)
+    bsel = b[gid]  # (Mtotal, K, N)
+    out = jnp.einsum(
+        "mk,mkn->mn", a, bsel, preferred_element_type=jnp.float32
+    )
+    return out.astype(out_dtype)

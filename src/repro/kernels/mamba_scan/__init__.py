@@ -1,0 +1,4 @@
+from repro.kernels.mamba_scan.ops import mamba_chunk_scan
+from repro.kernels.mamba_scan.ref import mamba_chunk_ref, mamba_scan_ref
+
+__all__ = ["mamba_chunk_scan", "mamba_chunk_ref", "mamba_scan_ref"]

@@ -1,0 +1,96 @@
+"""Public SSD ops (fwd pallas / bwd via chunked-ref VJP).
+
+``ssd_scan``         — general gated linear recurrence (powers mLSTM too).
+``mamba_chunk_scan`` — Mamba2 layout (dt/A, group-shared B/C).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dispatch import interpret_mode, use_pallas
+from repro.kernels.mamba_scan.kernel import mamba_scan_pallas
+from repro.kernels.mamba_scan.ref import (
+    _mamba_args,
+    mamba_chunk_ref,
+    ssd_chunk_ref,
+)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _ssd(xd, da, Bm, Cm, chunk, interpret):
+    Bsz, T, H, P = xd.shape
+    N = Bm.shape[-1]
+    Tp = -(-T // chunk) * chunk
+    pad = Tp - T
+    f32 = jnp.float32
+
+    def prep(t, feat):  # (B,T,H,*) -> (B*H, Tp, *)
+        t = jnp.pad(
+            t.astype(f32), ((0, 0), (0, pad), (0, 0)) + ((0, 0),) * len(feat)
+        )
+        t = t.transpose(0, 2, 1, *range(3, 3 + len(feat)))
+        return t.reshape(Bsz * H, Tp, *feat)
+
+    xdf = prep(xd, (P,))
+    daf = prep(da[..., None], (1,))[..., 0]
+    Bf = prep(Bm, (N,))
+    Cf = prep(Cm, (N,))
+    s0 = jnp.zeros((Bsz * H, N, P), f32)
+    y, s_final = mamba_scan_pallas(
+        xdf, daf, Bf, Cf, s0, chunk=chunk, interpret=interpret
+    )
+    y = y.reshape(Bsz, H, Tp, P)[:, :, :T].transpose(0, 2, 1, 3)
+    return y.astype(xd.dtype), s_final.reshape(Bsz, H, N, P)
+
+
+def _ssd_fwd(xd, da, Bm, Cm, chunk, interpret):
+    return _ssd(xd, da, Bm, Cm, chunk, interpret), (xd, da, Bm, Cm)
+
+
+def _ssd_bwd(chunk, interpret, res, g):
+    xd, da, Bm, Cm = res
+    _, vjp = jax.vjp(
+        lambda *a: ssd_chunk_ref(*a, chunk=chunk), xd, da, Bm, Cm
+    )
+    return vjp(g)
+
+
+_ssd.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+def ssd_scan(
+    xd, da, Bm, Cm,
+    *,
+    chunk: int = 128,
+    initial_state=None,
+    interpret: bool | None = None,
+    force_ref: bool = False,
+):
+    """General SSD: xd (B,T,H,P); da (B,T,H); Bm/Cm (B,T,H,N).
+    Returns (y, final_state)."""
+    interp = bool(interpret)  # None → ref path off-TPU, pallas on TPU
+    if force_ref or initial_state is not None or not (use_pallas() or interp):
+        return ssd_chunk_ref(
+            xd, da, Bm, Cm, chunk=chunk, initial_state=initial_state
+        )
+    return _ssd(xd, da, Bm, Cm, chunk, interp)
+
+
+def mamba_chunk_scan(
+    x, dt, A, Bm, Cm,
+    *,
+    chunk: int = 128,
+    initial_state=None,
+    interpret: bool | None = None,
+    force_ref: bool = False,
+):
+    """Mamba2 SSD.  x (B,T,H,P); dt (B,T,H); A (H,); Bm/Cm (B,T,N)."""
+    xd, da, Bh, Ch = _mamba_args(x, dt, A, Bm, Cm)
+    y, S = ssd_scan(
+        xd, da, Bh, Ch, chunk=chunk, initial_state=initial_state,
+        interpret=interpret, force_ref=force_ref,
+    )
+    return y.astype(x.dtype), S

@@ -1,0 +1,342 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede every other import: jax locks the device count on first init.
+# The dry-run (and ONLY the dry-run) fakes 512 host devices so the production
+# meshes can be built and every (arch × shape × mesh) cell can be
+# lower()+compile()d — proving shardings, collectives, and memory are
+# coherent without TPU hardware.
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_arch, get_shape, list_archs  # noqa: E402
+from repro.configs.shapes import SHAPES                    # noqa: E402
+from repro.data.pipeline import input_specs                # noqa: E402
+from repro.dist.sharding import (                          # noqa: E402
+    batch_pspecs,
+    cache_pspecs,
+    named,
+    params_pspecs,
+    zero1_pspecs,
+)
+from repro.launch.mesh import make_production_mesh         # noqa: E402
+from repro.models import build_model                       # noqa: E402
+from repro.optim import AdamW, AdamWConfig                 # noqa: E402
+from repro.train.train_loop import TrainState, make_train_step  # noqa: E402
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum bytes of every collective op in post-SPMD HLO.
+
+    Handles tuple-shaped results (all-to-all) and async -start forms; the
+    per-op size is max(result bytes, operand bytes) on one device.
+    """
+    dt_bytes = {
+        "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+        "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+        "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    }
+    shape_pat = re.compile(r"(\w+)\[([\d,]*)\]")
+
+    def side_bytes(text: str) -> int:
+        total = 0
+        for m in shape_pat.finditer(text):
+            n = 1
+            for d in m.group(2).split(","):
+                if d:
+                    n *= int(d)
+            total += n * dt_bytes.get(m.group(1), 4)
+        return total
+
+    out = {c: 0 for c in _COLLECTIVES}
+    count = {c: 0 for c in _COLLECTIVES}
+    line_pat = re.compile(
+        r"=\s*(.*?)\s(" + "|".join(_COLLECTIVES) + r")(?:-start)?\((.*)$"
+    )
+    for line in hlo_text.splitlines():
+        m = line_pat.search(line)
+        if not m:
+            continue
+        res, op, operands = m.group(1), m.group(2), m.group(3)
+        out[op] += max(side_bytes(res), side_bytes(operands))
+        count[op] += 1
+    return {"bytes": out, "count": count,
+            "total_bytes": sum(out.values())}
+
+
+def dot_flops_bytes(hlo_text: str) -> dict:
+    """Exact FLOPs/bytes of every `dot` op, parsed from post-SPMD HLO.
+
+    XLA:CPU's cost_analysis does not attribute FLOPs to dots that lower to
+    library calls, so the roofline counts them from the text: per
+    computation (SSA scope) build a name→shape table, then
+    flops += 2 * prod(result) * prod(lhs contracting dims).
+    Scan (while) bodies appear once — the depth extrapolation multiplies
+    them out exactly as for the collective bytes.
+    """
+    dt_bytes = {
+        "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+        "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8,
+    }
+    inst = re.compile(r"^\s*(%[\w.\-]+) = (\w+)\[([\d,]*)\]")
+    dot = re.compile(
+        r"= (\w+)\[([\d,]*)\](?:\{[^}]*\})? dot\((%[\w.\-]+), "
+        r"(%[\w.\-]+)\).*?lhs_contracting_dims=\{([\d,]*)\}"
+    )
+
+    def dims(s_):
+        return [int(x) for x in s_.split(",") if x]
+
+    flops = 0.0
+    bytes_ = 0.0
+    table: dict = {}
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace() and line.rstrip().endswith("{"):
+            table = {}  # new computation scope
+            continue
+        m = inst.match(line)
+        if m:
+            table[m.group(1)] = (m.group(2), dims(m.group(3)))
+        dm = dot.search(line)
+        if dm:
+            out_dt, out_dims = dm.group(1), dims(dm.group(2))
+            lhs = table.get(dm.group(3))
+            rhs = table.get(dm.group(4))
+            if lhs is None:
+                continue
+            k = 1
+            for ci in dims(dm.group(5)):
+                if ci < len(lhs[1]):
+                    k *= lhs[1][ci]
+            out_n = 1
+            for d_ in out_dims:
+                out_n *= d_
+            flops += 2.0 * out_n * k
+            bytes_ += out_n * dt_bytes.get(out_dt, 4)
+            for opnd in (lhs, rhs):
+                if opnd:
+                    n = 1
+                    for d_ in opnd[1]:
+                        n *= d_
+                    bytes_ += n * dt_bytes.get(opnd[0], 4)
+    return {"dot_flops": flops, "dot_bytes": bytes_}
+
+
+def _while_trip_counts(hlo_text: str) -> float:
+    """Multiply cost_analysis FLOPs by scan trip counts is impossible
+    post-hoc; instead we report the raw numbers and scan counts for
+    context."""
+    return len(re.findall(r"while\(", hlo_text))
+
+
+def _with_depth(cfg, depth):
+    """Reduced-depth variant of an arch for roofline extrapolation.
+
+    XLA cost_analysis counts a while (scan) body ONCE regardless of trip
+    count, so FLOPs/bytes/collectives of an L-layer scanned model are
+    recovered from two shallow compiles:  C(L) = C(d1) + (L-d1) * (C(d2)-
+    C(d1))/(d2-d1) — exact for per-layer-homogeneous stacks.
+    """
+    import dataclasses
+    if depth is None:
+        return cfg
+    if cfg.family == "ssm":
+        return dataclasses.replace(cfg, n_layers=depth * cfg.slstm_every)
+    if cfg.family == "moe":
+        return dataclasses.replace(
+            cfg, n_layers=cfg.first_dense_layers + depth
+        )
+    return dataclasses.replace(cfg, n_layers=depth)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               depth: int | None = None) -> dict:
+    cfg = _with_depth(get_arch(arch), depth)
+    shape = get_shape(shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "status": "ok", "depth": depth,
+        "n_layers": cfg.n_layers,
+    }
+    if not cfg.supports_shape(shape_name):
+        rec["status"] = "skipped"
+        rec["reason"] = (
+            "full-attention arch at 524k context (quadratic prefill / "
+            "unsharded-head KV); run only for SSM/hybrid — DESIGN.md §8"
+        )
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # remat only pays off in training; serve steps lower without it
+    model = build_model(
+        cfg, mesh=mesh, remat="full" if shape.kind == "train" else "none"
+    )
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            lowered = _lower_train(model, cfg, shape, mesh)
+        elif shape.kind == "prefill":
+            lowered = _lower_prefill(model, cfg, shape, mesh)
+        else:
+            lowered = _lower_decode(model, cfg, shape, mesh)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, f, None)
+            if v is not None:
+                rec[f] = int(v)
+        cost = compiled.cost_analysis()
+        if cost:
+            rec["flops"] = float(cost.get("flops", -1))
+            rec["hlo_bytes"] = float(
+                cost.get("bytes accessed", cost.get("bytes accessed0{}", -1))
+            )
+            rec["cost_raw"] = {
+                k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float)) and (
+                    "flops" in k or "bytes" in k or "utilization" in k
+                )
+            }
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_bytes(hlo)
+        rec.update(dot_flops_bytes(hlo))
+        from repro.launch.hlo_cost import total_costs
+        rec.update(total_costs(hlo))
+        rec["n_while_loops"] = _while_trip_counts(hlo)
+        rec["hlo_chars"] = len(hlo)
+    return rec
+
+
+def _lower_train(model, cfg, shape, mesh):
+    opt = AdamW(AdamWConfig())
+    step_fn = make_train_step(model, opt, n_microbatches=1)
+    state_shapes = jax.eval_shape(
+        lambda: TrainState(
+            model.init(jax.random.PRNGKey(0), jnp.float32),
+            opt.init(model.init(jax.random.PRNGKey(0), jnp.float32)),
+            jnp.zeros((), jnp.int32),
+        )
+    )
+    batch = input_specs(cfg, shape)
+    p_specs = params_pspecs(model, mesh)
+    z_specs = zero1_pspecs(model, mesh)
+    from jax.sharding import PartitionSpec as P
+    # ZeRO-1 done right: the f32 masters AND moments live data-sharded;
+    # the forward all-gathers only the bf16 cast (§Perf MoE iteration M4).
+    state_specs = TrainState(
+        z_specs,
+        type(state_shapes.opt)(P(), z_specs, z_specs),
+        P(),
+    )
+    b_specs = batch_pspecs(batch, mesh)
+    return jax.jit(
+        step_fn,
+        in_shardings=(named(mesh, state_specs), named(mesh, b_specs)),
+        out_shardings=(named(mesh, state_specs), None),
+    ).lower(state_shapes, batch)
+
+
+def _lower_prefill(model, cfg, shape, mesh):
+    params = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0), jnp.bfloat16)
+    )
+    cache = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                 jnp.bfloat16)
+    )
+    batch = input_specs(cfg, shape)
+    p_specs = params_pspecs(model, mesh)
+    c_specs = cache_pspecs(cache, mesh, model)
+    b_specs = batch_pspecs(batch, mesh)
+    return jax.jit(
+        model.prefill,
+        in_shardings=(named(mesh, p_specs), named(mesh, b_specs),
+                      named(mesh, c_specs)),
+        out_shardings=(None, named(mesh, c_specs), None),
+    ).lower(params, batch, cache)
+
+
+def _lower_decode(model, cfg, shape, mesh):
+    params = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0), jnp.bfloat16)
+    )
+    cache = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                 jnp.bfloat16)
+    )
+    batch = input_specs(cfg, shape)
+    tok = batch.get("tokens", batch.get("frames"))
+    cache_len = jax.ShapeDtypeStruct((), jnp.int32)
+    p_specs = params_pspecs(model, mesh)
+    c_specs = cache_pspecs(cache, mesh, model)
+    b_specs = batch_pspecs({"x": tok}, mesh)["x"]
+    return jax.jit(
+        model.decode_step,
+        in_shardings=(named(mesh, p_specs), named(mesh, b_specs),
+                      named(mesh, c_specs), None),
+        out_shardings=(None, named(mesh, c_specs), None),
+    ).lower(params, tok, cache, cache_len)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id or 'all'")
+    ap.add_argument("--shape", default=None, help="shape name or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--depth", type=int, default=None,
+                    help="scanned-stack depth override (roofline probes)")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch in (None, "all") else [args.arch]
+    shapes = list(SHAPES) if args.shape in (None, "all") else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                suffix = f"__L{args.depth}" if args.depth else ""
+                out = RESULTS_DIR / f"{arch}__{shape}__{mesh_name}{suffix}.json"
+                if out.exists() and not args.force:
+                    print(f"[skip] {out.name} exists")
+                    continue
+                print(f"[dryrun] {arch} × {shape} × {mesh_name}", flush=True)
+                try:
+                    rec = lower_cell(arch, shape, mp, depth=args.depth)
+                except Exception as e:  # noqa: BLE001
+                    rec = {
+                        "arch": arch, "shape": shape, "mesh": mesh_name,
+                        "status": "error", "error": repr(e),
+                        "trace": traceback.format_exc()[-4000:],
+                    }
+                out.write_text(json.dumps(rec, indent=1))
+                print(f"  -> {rec['status']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,204 @@
+"""Call-graph cost accounting over post-SPMD HLO text.
+
+XLA:CPU's ``cost_analysis`` (a) does not attribute FLOPs to library-call
+dots and (b) counts while (scan) bodies once, ignoring trip counts.  This
+module parses the compiled module text and walks the call graph:
+
+    cost(comp) = own(dots, collectives)
+               + Σ fusion/call children          × 1
+               + Σ while children (body + cond)  × trip_count
+               + Σ conditional children          × mean(branches)
+
+Trip counts come from the largest integer literal in the while condition
+computation (XLA canonicalizes counted loops to ``compare(i, const)``).
+Returns per-device totals: dot FLOPs, dot bytes, collective bytes by type.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DT_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
+_INST = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\w+)\[([\d,]*)\]")
+_DOT = re.compile(
+    r"=\s*(\w+)\[([\d,]*)\](?:\{[^}]*\})?\s*dot\((%[\w.\-]+),\s*"
+    r"(%[\w.\-]+)\).*?lhs_contracting_dims=\{([\d,]*)\}"
+)
+_COLL = re.compile(
+    r"=\s*(.*?)\s(" + "|".join(COLLECTIVES) + r")(?:-start)?\((.*)$"
+)
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALLED = re.compile(
+    r"(?:calls=|body=|condition=|to_apply=)(%?[\w.\-]+)"
+)
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TF = re.compile(r"(?:true_computation|false_computation)=(%?[\w.\-]+)")
+_WHILE = re.compile(r"=\s*[^=]*\bwhile\(.*body=(%?[\w.\-]+)")
+_CONST = re.compile(r"constant\((\d+)\)")
+
+
+def _dims(s: str) -> List[int]:
+    return [int(x) for x in s.split(",") if x]
+
+
+def _nbytes(dtype: str, dims: List[int]) -> float:
+    n = 1
+    for d in dims:
+        n *= d
+    return n * DT_BYTES.get(dtype, 4)
+
+
+@dataclass
+class Comp:
+    name: str
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=dict)
+    children: List[Tuple[str, str]] = field(default_factory=list)
+    # (kind, name): kind ∈ call | while_body | while_cond | branch
+    branch_groups: List[List[str]] = field(default_factory=list)
+    while_pairs: List[Tuple[str, str]] = field(default_factory=list)
+    max_const: int = 1
+
+
+def parse_hlo(text: str) -> Dict[str, Comp]:
+    comps: Dict[str, Comp] = {}
+    cur: Optional[Comp] = None
+    table: Dict[str, Tuple[str, List[int]]] = {}
+    entry = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR.match(line)
+        if hdr and not line.lstrip().startswith("%constant"):
+            name = hdr.group(1).lstrip("%")
+            cur = Comp(name)
+            comps[name] = cur
+            table = {}
+            if line.startswith("ENTRY"):
+                entry = name
+            continue
+        if cur is None:
+            continue
+        m = _INST.match(line)
+        if m:
+            table[m.group(1)] = (m.group(2), _dims(m.group(3)))
+        for c in _CONST.finditer(line):
+            cur.max_const = max(cur.max_const, int(c.group(1)))
+        dm = _DOT.search(line)
+        if dm:
+            out_dt, out_dims = dm.group(1), _dims(dm.group(2))
+            lhs = table.get(dm.group(3))
+            rhs = table.get(dm.group(4))
+            k = 1
+            if lhs:
+                for ci in _dims(dm.group(5)):
+                    if ci < len(lhs[1]):
+                        k *= lhs[1][ci]
+            out_n = 1
+            for d in out_dims:
+                out_n *= d
+            cur.dot_flops += 2.0 * out_n * k
+            cur.dot_bytes += _nbytes(out_dt, out_dims)
+            for opnd in (lhs, rhs):
+                if opnd:
+                    cur.dot_bytes += _nbytes(*opnd)
+        cm = _COLL.search(line)
+        if cm:
+            res, op, operands = cm.groups()
+            res_b = sum(_nbytes(d, _dims(s)) for d, s in _SHAPE.findall(res))
+            op_b = sum(
+                _nbytes(d, _dims(s)) for d, s in _SHAPE.findall(operands)
+            )
+            # wire bytes per op: AG/AR move the result; RS moves the
+            # operand; a2a/permute move ~the payload either way.  (A fused
+            # reduce+AR has a scalar result — counting the operand would
+            # bill a 4-byte collective as the local tensor size.)
+            if op in ("all-gather", "all-reduce"):
+                size = res_b
+            elif op == "reduce-scatter":
+                size = op_b
+            else:
+                size = max(res_b, op_b)
+            cur.coll[op] = cur.coll.get(op, 0.0) + size
+        wm = _WHILE.search(line)
+        if wm:
+            cond = re.search(r"condition=(%?[\w.\-]+)", line)
+            cur.while_pairs.append(
+                (wm.group(1).lstrip("%"),
+                 cond.group(1).lstrip("%") if cond else "")
+            )
+        else:
+            bm = _BRANCHES.search(line)
+            if bm:
+                cur.branch_groups.append(
+                    [b.strip().lstrip("%") for b in bm.group(1).split(",")]
+                )
+            tf = _TF.findall(line)
+            if tf:
+                cur.branch_groups.append([t.lstrip("%") for t in tf])
+            if "fusion(" in line or re.search(r"\bcall\(", line):
+                for c in _CALLED.finditer(line):
+                    cur.children.append(("call", c.group(1).lstrip("%")))
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    comps["__entry__"] = comps[entry]
+    return comps
+
+
+def total_costs(text: str) -> dict:
+    comps = parse_hlo(text)
+    memo: Dict[str, dict] = {}
+
+    def walk(name: str, depth=0) -> dict:
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        zero = {"flops": 0.0, "dot_bytes": 0.0,
+                "coll": {k: 0.0 for k in COLLECTIVES}}
+        if c is None or depth > 64:
+            return zero
+        memo[name] = zero  # cycle guard
+        out = {
+            "flops": c.dot_flops,
+            "dot_bytes": c.dot_bytes,
+            "coll": {k: c.coll.get(k, 0.0) for k in COLLECTIVES},
+        }
+
+        def add(src: dict, mult: float = 1.0):
+            out["flops"] += src["flops"] * mult
+            out["dot_bytes"] += src["dot_bytes"] * mult
+            for k in COLLECTIVES:
+                out["coll"][k] += src["coll"][k] * mult
+
+        for kind, child in c.children:
+            add(walk(child, depth + 1))
+        for body, cond in c.while_pairs:
+            trips = comps[cond].max_const if cond in comps else 1
+            trips = max(trips, 1)
+            add(walk(body, depth + 1), trips)
+        for group in c.branch_groups:
+            costs = [walk(b, depth + 1) for b in group if b in comps]
+            if costs:
+                n = len(costs)
+                for src in costs:
+                    add(src, 1.0 / n)  # mean of branches
+        memo[name] = out
+        return out
+
+    res = walk("__entry__")
+    return {
+        "walked_flops": res["flops"],
+        "walked_dot_bytes": res["dot_bytes"],
+        "walked_coll_bytes": res["coll"],
+        "walked_coll_total": sum(res["coll"].values()),
+    }

@@ -1,0 +1,32 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state.  Single pod = 16×16 (256 v5e chips); multi-pod adds a leading 'pod'
+axis (2×16×16 = 512 chips) — pure-DP across pods (DCN-class links), TP/EP
+inside a pod (ICI).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — "
+            "run through launch/dryrun.py (forces 512 host devices)"
+        )
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over whatever devices exist (tests)."""
+    devices = jax.devices()[: data * model]
+    return Mesh(np.asarray(devices).reshape(data, model), ("data", "model"))

@@ -1,0 +1,413 @@
+"""Model builder: assembles any assigned architecture from its ArchConfig.
+
+One ``Model`` object exposes the full lifecycle:
+    init / param_axes           — declarative specs (spec.py)
+    loss(params, batch)         — training forward + CE (+ MoE aux)
+    prefill / decode_step       — serving with per-family caches
+Layer stacks are ``lax.scan``-ed (stacked params) so 80-layer models lower
+in O(1 layer) — required for the 512-device dry-run compiles.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks as B
+from repro.models.attention import init_kv_cache, init_mla_cache
+from repro.models.common import (
+    cross_entropy,
+    embed_apply,
+    embed_specs,
+    lm_head_apply,
+    rms_norm,
+    rms_norm_spec,
+)
+from repro.models.spec import Spec, init_params, param_axes, stack_specs
+from repro.models.ssm import init_mamba_cache
+from repro.models.xlstm import init_mlstm_cache, init_slstm_cache
+
+MOE_AUX_COEF = 1e-3
+
+
+@dataclass
+class Model:
+    cfg: ArchConfig
+    mesh: Any = None                 # set by the launcher for EP MoE
+    moe_mode: str = "auto"           # auto | capacity | ep
+    moe_capacity_factor: float = 1.25
+    remat: str = "none"              # none | full | dots
+
+    # ------------------------------------------------------------- specs
+    def specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        s: Dict[str, Any] = {"embed": embed_specs(cfg.vocab_size, cfg.d_model,
+                                                  cfg.tie_embeddings),
+                             "final_norm": rms_norm_spec(cfg.d_model)}
+        fam = cfg.family
+        if fam in ("dense", "audio", "vlm"):
+            s["layers"] = stack_specs(
+                B.attn_block_specs(cfg, cfg.d_ff, moe=False), cfg.n_layers
+            )
+        elif fam == "moe":
+            s["dense_layers"] = stack_specs(
+                B.attn_block_specs(cfg, cfg.dense_d_ff or cfg.d_ff, moe=False),
+                cfg.first_dense_layers,
+            )
+            s["layers"] = stack_specs(
+                B.attn_block_specs(cfg, cfg.d_ff, moe=True),
+                cfg.n_layers - cfg.first_dense_layers,
+            )
+        elif fam == "hybrid":
+            s["layers"] = stack_specs(
+                B.zamba_layer_specs(cfg), cfg.n_layers
+            )
+            s["shared"] = B.zamba_shared_specs(cfg)
+        elif fam == "ssm":
+            n_groups = cfg.n_layers // cfg.slstm_every
+            s["layers"] = stack_specs(
+                B.xlstm_group_specs(cfg), n_groups
+            )
+        else:
+            raise ValueError(fam)
+        return s
+
+    def init(self, key: jax.Array, dtype=jnp.float32):
+        return init_params(self.specs(), key, dtype)
+
+    def param_axes(self):
+        return param_axes(self.specs())
+
+    # ------------------------------------------------------- embeddings
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        if cfg.frontend == "audio_frames":
+            return batch["frames"]  # precomputed (B, T, D) — stub frontend
+        x = embed_apply(params["embed"], batch["tokens"])
+        if cfg.frontend == "vision_patches":
+            x = jnp.concatenate([batch["patches"], x], axis=1)
+        return x
+
+    # ------------------------------------------------------------ layers
+    def _run_layers(self, params, x, positions, cache=None, cache_len=None):
+        cfg = self.cfg
+        fam = cfg.family
+        aux_total = jnp.zeros((), jnp.float32)
+
+        if fam in ("dense", "audio", "vlm", "moe"):
+            cache_d = None
+            if fam == "moe" and cfg.first_dense_layers:
+                x, cache_d, _ = self._scan_attn(
+                    params["dense_layers"], x, positions, moe=False,
+                    cache=None if cache is None else cache["dense"],
+                    cache_len=cache_len, layer_offset=0,
+                )
+            x, cache_m, aux = self._scan_attn(
+                params["layers"], x, positions, moe=(fam == "moe"),
+                cache=None if cache is None else cache["main"],
+                cache_len=cache_len, layer_offset=cfg.first_dense_layers,
+            )
+            aux_total += aux
+            new_cache = (
+                None if cache is None
+                else {"dense": cache_d, "main": cache_m}
+            )
+        elif fam == "hybrid":
+            x, new_cache = self._scan_zamba(
+                params, x, positions, cache, cache_len
+            )
+        else:  # ssm / xlstm
+            x, new_cache = self._scan_xlstm(params, x, cache)
+
+        x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+        return x, new_cache, aux_total
+
+    def _scan_attn(self, stack, x, positions, *, moe, cache, cache_len,
+                   layer_offset):
+        cfg = self.cfg
+
+        def body(carry, inp):
+            x, i = carry
+            p, c = inp
+            if cfg.sliding_window and cfg.local_global_ratio:
+                # window must be static for the kernel: cond over the two
+                # static variants (gemma3's 5 local : 1 global pattern).
+                r = cfg.local_global_ratio
+                is_global = (i % (r + 1)) == r
+
+                def glob(args):
+                    x, p, c = args
+                    return B.attn_block_apply(
+                        p, x, cfg, positions, moe=moe, window=0,
+                        cache=c, cache_len=cache_len, mesh=self.mesh,
+                        moe_mode=self.moe_mode,
+                        moe_capacity_factor=self.moe_capacity_factor,
+                    )
+
+                def local(args):
+                    x, p, c = args
+                    return B.attn_block_apply(
+                        p, x, cfg, positions, moe=moe,
+                        window=cfg.sliding_window,
+                        cache=c, cache_len=cache_len, mesh=self.mesh,
+                        moe_mode=self.moe_mode,
+                        moe_capacity_factor=self.moe_capacity_factor,
+                    )
+
+                y, new_c, aux = jax.lax.cond(is_global, glob, local, (x, p, c))
+            elif cfg.sliding_window:
+                y, new_c, aux = B.attn_block_apply(
+                    p, x, cfg, positions, moe=moe, window=cfg.sliding_window,
+                    cache=c, cache_len=cache_len, mesh=self.mesh,
+                    moe_mode=self.moe_mode,
+                    moe_capacity_factor=self.moe_capacity_factor,
+                )
+            else:
+                y, new_c, aux = B.attn_block_apply(
+                    p, x, cfg, positions, moe=moe, window=0,
+                    cache=c, cache_len=cache_len, mesh=self.mesh,
+                    moe_mode=self.moe_mode,
+                    moe_capacity_factor=self.moe_capacity_factor,
+                )
+            return (y, i + 1), (new_c, aux)
+
+        if self.remat == "full":
+            body = jax.checkpoint(body)
+        elif self.remat == "dots":
+            # save matmul outputs: the backward skips recomputing the TP
+            # GEMMs *and their psum all-reduces* (§Perf train iteration)
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            )
+        elif self.remat == "dots":
+            # save matmul outputs: the backward skips recomputing the TP
+            # GEMMs *and their psum all-reduces* (§Perf train iteration)
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            )
+        elif self.remat == "dots":
+            # save matmul outputs: the backward skips recomputing the TP
+            # GEMMs *and their psum all-reduces* (§Perf train iteration)
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            )
+        (x, _), (new_cache, auxs) = jax.lax.scan(
+            body, (x, layer_offset), (stack, cache)
+        )
+        return x, new_cache, auxs.sum()
+
+    def _scan_zamba(self, params, x, positions, cache, cache_len):
+        cfg = self.cfg
+        shared = params["shared"]
+
+        def body(carry, inp):
+            x, i = carry
+            p, c = inp
+            y, new_c = B.zamba_layer_apply(
+                p, shared, x, cfg, positions, i, cache=c, cache_len=cache_len,
+                mesh=self.mesh,
+            )
+            return (y, i + 1), new_c
+
+        if self.remat == "full":
+            body = jax.checkpoint(body)
+        (x, _), new_cache = jax.lax.scan(
+            body, (x, 0), (params["layers"], cache)
+        )
+        return x, new_cache
+
+    def _scan_xlstm(self, params, x, cache):
+        cfg = self.cfg
+
+        def body(x, inp):
+            p, c = inp
+            y, new_c = B.xlstm_group_apply(p, x, cfg, cache=c)
+            return y, new_c
+
+        if self.remat == "full":
+            body = jax.checkpoint(body)
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        return x, new_cache
+
+    # ----------------------------------------------------------- training
+    def forward(self, params, batch):
+        x = self._embed_inputs(params, batch)
+        Bsz, T = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(T)[None], (Bsz, T))
+        x, _, aux = self._run_layers(params, x, positions)
+        logits = lm_head_apply(params["embed"], x)
+        return logits, aux
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        if self.cfg.frontend == "vision_patches":
+            # patches are unsupervised context: align labels to text tail.
+            logits = logits[:, -labels.shape[1]:]
+        ce = cross_entropy(logits, labels)
+        total = ce + MOE_AUX_COEF * aux
+        return total, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------ serving
+    def init_cache(self, batch: int, s_max: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        fam = cfg.family
+
+        def kv(n):
+            mk = (
+                init_mla_cache if cfg.attn_type == "mla" else init_kv_cache
+            )
+            one = mk(cfg, batch, s_max, dtype)
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n, *a.shape)).copy()
+                if n else a,
+                one,
+            )
+
+        if fam in ("dense", "audio", "vlm"):
+            return {"dense": None, "main": kv(cfg.n_layers)}
+        if fam == "moe":
+            return {
+                "dense": kv(cfg.first_dense_layers),
+                "main": kv(cfg.n_layers - cfg.first_dense_layers),
+            }
+        if fam == "hybrid":
+            L = cfg.n_layers
+
+            def stack(tree, n):
+                return jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None], (n, *a.shape)).copy(),
+                    tree,
+                )
+
+            return {
+                "mamba": stack(init_mamba_cache(cfg, batch, dtype), L),
+                "kv": stack(init_kv_cache(cfg, batch, s_max, dtype), L),
+            }
+        if fam == "ssm":
+            n_groups = cfg.n_layers // cfg.slstm_every
+            k = cfg.slstm_every
+
+            def stack(tree, *ns):
+                for n in reversed(ns):
+                    tree = jax.tree.map(
+                        lambda a: jnp.broadcast_to(a[None], (n, *a.shape)).copy(),
+                        tree,
+                    )
+                return tree
+
+            return {
+                "mlstm": stack(init_mlstm_cache(cfg, batch, dtype), n_groups, k - 1),
+                "slstm": stack(init_slstm_cache(cfg, batch, dtype), n_groups),
+            }
+        raise ValueError(fam)
+
+    def prefill(self, params, batch, cache):
+        """Feed a prompt; returns (last-token logits, cache, new length)."""
+        x = self._embed_inputs(params, batch)
+        Bsz, T = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(T)[None], (Bsz, T))
+        cache_len = jnp.zeros((), jnp.int32)
+        x, new_cache, _ = self._run_layers(
+            params, x, positions, cache=self._wrap_cache(cache),
+            cache_len=cache_len,
+        )
+        logits = lm_head_apply(params["embed"], x[:, -1:])
+        return logits, self._unwrap_cache(new_cache, cache), T
+
+    def decode_step(self, params, tokens, cache, cache_len):
+        """One-token step.  tokens (B, 1) (or frames (B,1,D) for audio)."""
+        cfg = self.cfg
+        if cfg.frontend == "audio_frames":
+            x = tokens  # (B, 1, D) frame embedding
+        else:
+            x = embed_apply(params["embed"], tokens)
+        Bsz = x.shape[0]
+        positions = jnp.broadcast_to(cache_len[None, None], (Bsz, 1))
+        x, new_cache, _ = self._run_layers(
+            params, x, positions, cache=self._wrap_cache(cache),
+            cache_len=cache_len,
+        )
+        logits = lm_head_apply(params["embed"], x)
+        return logits, self._unwrap_cache(new_cache, cache), cache_len + 1
+
+    # ---------------------------------------------------- cache shardings
+    def cache_pspecs(self, mesh, cache):
+        """PartitionSpecs for ``cache`` (an init_cache tree or its
+        eval_shape): batch over DP axes where divisible, head/channel dims
+        over 'model' where divisible."""
+        from jax.sharding import PartitionSpec as P
+
+        cfg = self.cfg
+        dp_all = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        msize = mesh.shape.get("model", 1)
+
+        def dp_for(b):
+            dp = dp_all
+            import numpy as _np
+            while dp and b % int(_np.prod([mesh.shape[a] for a in dp])) != 0:
+                dp = dp[:-1]
+            return dp if dp else None
+
+        def m_for(d):
+            return "model" if (msize > 1 and d % msize == 0) else None
+
+        def kv_spec(tree, lead):
+            # KVCache (L,B,S,H,hd) | MLACache ckv (L,B,S,r), krope (L,B,S,dr)
+            def one(x):
+                sh = x.shape
+                if len(sh) == 5:   # k/v
+                    return P(*lead, dp_for(sh[1]), None, m_for(sh[3]), None)
+                return P(*lead, dp_for(sh[1]), None, None)
+            return jax.tree.map(one, tree)
+
+        fam = cfg.family
+        c = cache
+        if fam in ("dense", "audio", "vlm"):
+            return {"dense": None, "main": kv_spec(c["main"], (None,))}
+        if fam == "moe":
+            return {"dense": kv_spec(c["dense"], (None,)),
+                    "main": kv_spec(c["main"], (None,))}
+        if fam == "hybrid":
+
+            def mamba_one(x):
+                sh = x.shape
+                if len(sh) == 5:   # state (L,B,H,N,P)
+                    return P(None, dp_for(sh[1]), m_for(sh[2]), None, None)
+                return P(None, dp_for(sh[1]), None, m_for(sh[3]))  # conv
+            return {"mamba": jax.tree.map(mamba_one, c["mamba"]),
+                    "kv": kv_spec(c["kv"], (None,))}
+        # ssm / xlstm
+        def ml_one(x):
+            sh = x.shape  # (G, k-1, B, ...) trees
+            rest = [None] * (len(sh) - 3)
+            if len(sh) >= 5:  # C/n: (G,k-1,B,H,N/1,P?) → shard H if divisible
+                rest[0] = m_for(sh[3])
+            return P(None, None, dp_for(sh[2]), *rest)
+
+        def sl_one(x):
+            sh = x.shape  # (G, B, H, P)
+            return P(None, dp_for(sh[1]), m_for(sh[2]), None)
+
+        return {"mlstm": jax.tree.map(ml_one, c["mlstm"]),
+                "slstm": jax.tree.map(sl_one, c["slstm"])}
+
+    # dense/moe caches are dicts keyed like the scan stacks already
+    def _wrap_cache(self, cache):
+        if self.cfg.family in ("dense", "audio", "vlm"):
+            return {"dense": None, "main": cache["main"]}
+        return cache
+
+    def _unwrap_cache(self, new_cache, old_cache):
+        return new_cache
+
+
+def build_model(cfg: ArchConfig, mesh=None, **kw) -> Model:
+    return Model(cfg=cfg, mesh=mesh, **kw)

@@ -1,0 +1,89 @@
+"""Declarative parameter specs.
+
+Every layer declares a nested dict of ``Spec`` (shape + logical axes + init).
+From one declaration we derive: initialized params (pytree of arrays),
+PartitionSpecs (via logical-axis rules in repro.dist.sharding), and parameter
+counts — keeping init and sharding impossible to drift apart.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis names, len == len(shape)
+    init: str = "normal"              # normal | zeros | ones | scaled | custom
+    scale: float = 1.0
+    custom: Optional[Callable[..., jax.Array]] = None  # f(key, shape)->arr
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+
+def is_spec_tree(tree) -> bool:
+    return any(
+        isinstance(l, Spec) for l in jax.tree.leaves(
+            tree, is_leaf=lambda x: isinstance(x, Spec)
+        )
+    )
+
+
+def init_params(specs, key: jax.Array, dtype=jnp.float32):
+    """Initialize a pytree of arrays from a pytree of Specs."""
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, Spec)
+    )
+    keys = jax.random.split(key, len(leaves))
+
+    def mk(spec: Spec, k):
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        if spec.init == "custom":
+            return spec.custom(k, spec.shape).astype(dtype)
+        fan_in = spec.shape[0] if len(spec.shape) > 1 else spec.size
+        std = spec.scale / math.sqrt(max(fan_in, 1))
+        if spec.init == "normal":
+            return std * jax.random.truncated_normal(
+                k, -2.0, 2.0, spec.shape, jnp.float32
+            ).astype(dtype)
+        raise ValueError(spec.init)
+
+    return jax.tree.unflatten(treedef, [mk(s, k) for s, k in zip(leaves, keys)])
+
+
+def param_axes(specs):
+    """Pytree of logical-axis tuples mirroring the param pytree."""
+    return jax.tree.map(
+        lambda s: s.axes, specs, is_leaf=lambda x: isinstance(x, Spec)
+    )
+
+
+def param_count(specs) -> int:
+    return sum(
+        s.size
+        for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, Spec))
+    )
+
+
+def stack_specs(specs, n: int, axis_name: str = "layers"):
+    """Prepend a scanned-layer axis to every Spec (for lax.scan stacks)."""
+    return jax.tree.map(
+        lambda s: Spec(
+            (n, *s.shape), (axis_name, *s.axes), s.init, s.scale, s.custom
+        ),
+        specs,
+        is_leaf=lambda x: isinstance(x, Spec),
+    )

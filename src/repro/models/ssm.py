@@ -1,0 +1,125 @@
+"""Mamba2 block (zamba2 backbone) with train/prefill chunked scan and O(1)
+decode state."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels.mamba_scan import mamba_chunk_scan
+from repro.models.common import rms_norm
+from repro.models.spec import Spec
+
+
+def _softplus_inv(y):
+    return float(jnp.log(jnp.expm1(jnp.asarray(y))))
+
+
+def mamba_specs(cfg: ArchConfig) -> dict:
+    d, di = cfg.d_model, cfg.ssm_d_inner
+    N, H = cfg.ssm_state, cfg.ssm_n_heads
+    conv_ch = di + 2 * N
+
+    def a_init(k, shape):
+        return jnp.log(jax.random.uniform(k, shape, minval=1.0, maxval=16.0))
+
+    def dt_init(k, shape):
+        u = jax.random.uniform(k, shape, minval=1e-3, maxval=1e-1)
+        return jnp.log(jnp.expm1(u))  # softplus inverse
+
+    return {
+        "in_proj": Spec((d, 2 * di + 2 * N + H), ("embed", "mlp")),
+        "conv_w": Spec((cfg.ssm_conv, conv_ch), (None, "mlp"), scale=1.0),
+        "conv_b": Spec((conv_ch,), ("mlp",), init="zeros"),
+        "dt_bias": Spec((H,), (None,), init="custom", custom=dt_init),
+        "A_log": Spec((H,), (None,), init="custom", custom=a_init),
+        "D": Spec((H,), (None,), init="ones"),
+        "norm": Spec((di,), ("mlp",), init="ones"),
+        "out_proj": Spec((di, d), ("mlp", "embed"), scale=0.5),
+    }
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array   # (B, conv_width-1, conv_ch) — trailing conv inputs
+    state: jax.Array  # (B, H, N, P) f32 SSM state
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype) -> MambaCache:
+    di, N = cfg.ssm_d_inner, cfg.ssm_state
+    conv_ch = di + 2 * N
+    return MambaCache(
+        jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        jnp.zeros(
+            (batch, cfg.ssm_n_heads, N, cfg.ssm_head_dim), jnp.float32
+        ),
+    )
+
+
+def _causal_conv(x, w, b, prefix=None):
+    """Depthwise causal conv.  x (B,T,C); w (k,C); prefix (B,k-1,C)|None."""
+    k = w.shape[0]
+    if prefix is None:
+        prefix = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prefix, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return out + b, xp[:, -(k - 1) :, :]
+
+
+def _pin_ssd_heads(t, mesh, axis):
+    """Pin the SSM head dim over 'model' — GSPMD otherwise replicates the
+    chunked scan across the model axis (§Perf train iteration T2)."""
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return t
+    msize = mesh.shape["model"]
+    if msize <= 1 or t.shape[axis] % msize != 0:
+        return t
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    spec = [None] * t.ndim
+    spec[axis] = "model"
+    return jax.lax.with_sharding_constraint(t, NamedSharding(mesh, P(*spec)))
+
+
+def mamba_apply(
+    p: dict,
+    x: jax.Array,  # (B, T, D)
+    cfg: ArchConfig,
+    cache: Optional[MambaCache] = None,
+    mesh=None,
+):
+    """Returns (y, new_cache).  cache=None → training (no state out)."""
+    B, T, D = x.shape
+    di, N, H, P = (
+        cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_n_heads, cfg.ssm_head_dim,
+    )
+    proj = x @ p["in_proj"]
+    z, xc, Bm, Cm, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1
+    )
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    conv_out, conv_tail = _causal_conv(
+        conv_in, p["conv_w"], p["conv_b"],
+        prefix=cache.conv if cache is not None else None,
+    )
+    conv_out = jax.nn.silu(conv_out)
+    xc, Bm, Cm = jnp.split(conv_out, [di, di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = _pin_ssd_heads(xc.reshape(B, T, H, P), mesh, 2)
+    dt = _pin_ssd_heads(dt, mesh, 2)
+    y, state = mamba_chunk_scan(
+        xh, dt, A, Bm, Cm,
+        initial_state=cache.state if cache is not None else None,
+    )
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(B, T, di)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["out_proj"]
+    new_cache = (
+        MambaCache(conv_tail, state) if cache is not None else None
+    )
+    return out, new_cache

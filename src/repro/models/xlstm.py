@@ -1,0 +1,197 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked via the shared SSD kernel)
+and sLSTM (scalar memory, sequential scan).
+
+mLSTM maps exactly onto the SSD recurrence (DESIGN.md): decay = sigmoid
+forget gate, input scale = exp input gate, B = keys, C = queries; the
+normalizer n_t is the same recurrence with P=1.  This reuses
+``kernels.mamba_scan`` — one kernel family powers both SSM archs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels.mamba_scan.ops import ssd_scan
+from repro.models.common import rms_norm
+from repro.models.spec import Spec
+
+
+# ================================================================== mLSTM
+def mlstm_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    di = 2 * d                      # up-projection factor 2
+    H = cfg.n_heads
+    return {
+        "norm": Spec((d,), ("embed",), init="ones"),
+        "up": Spec((d, 2 * di), ("embed", "mlp")),       # [x_in, z-gate]
+        "conv_w": Spec((4, di), (None, "mlp")),
+        "conv_b": Spec((di,), ("mlp",), init="zeros"),
+        "wq": Spec((di, di), (None, "heads")),
+        "wk": Spec((di, di), (None, "heads")),
+        "wv": Spec((di, di), (None, "heads")),
+        "wif": Spec((di, 2 * H), ("mlp", None), scale=0.3),
+        "b_if": Spec((2 * H,), (None,), init="zeros"),
+        "out_norm": Spec((di,), ("mlp",), init="ones"),
+        "down": Spec((di, d), ("mlp", "embed"), scale=0.5),
+    }
+
+
+class MLSTMCache(NamedTuple):
+    conv: jax.Array   # (B, 3, di)
+    C: jax.Array      # (B, H, N, P) matrix memory
+    n: jax.Array      # (B, H, N, 1) normalizer
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch: int, dtype) -> MLSTMCache:
+    d = cfg.d_model
+    di, H = 2 * d, cfg.n_heads
+    N = P = di // H
+    return MLSTMCache(
+        jnp.zeros((batch, 3, di), dtype),
+        jnp.zeros((batch, H, N, P), jnp.float32),
+        jnp.zeros((batch, H, N, 1), jnp.float32),
+    )
+
+
+def _causal_conv(x, w, b, prefix):
+    k = w.shape[0]
+    xp = jnp.concatenate([prefix, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return jax.nn.silu(out + b), xp[:, -(k - 1) :, :]
+
+
+def mlstm_apply(
+    p: dict, x: jax.Array, cfg: ArchConfig,
+    cache: Optional[MLSTMCache] = None,
+):
+    B, T, D = x.shape
+    di, H = 2 * D, cfg.n_heads
+    N = P = di // H
+    h = rms_norm(p["norm"], x, cfg.norm_eps)
+    xin, z = jnp.split(h @ p["up"], 2, axis=-1)
+    prefix = (
+        cache.conv if cache is not None
+        else jnp.zeros((B, 3, di), xin.dtype)
+    )
+    conv_x, conv_tail = _causal_conv(xin, p["conv_w"], p["conv_b"], prefix)
+
+    q = (conv_x @ p["wq"]).reshape(B, T, H, N)
+    k = (conv_x @ p["wk"]).reshape(B, T, H, N) * (N ** -0.5)
+    v = (xin @ p["wv"]).reshape(B, T, H, P)
+    gates = xin @ p["wif"] + p["b_if"]
+    i_g = jnp.exp(
+        jnp.clip(gates[..., :H].astype(jnp.float32), -10.0, 8.0)
+    )                                                     # exp input gate
+    log_f = jax.nn.log_sigmoid(
+        gates[..., H:].astype(jnp.float32) + 3.0
+    )                                                     # forget gate bias
+
+    init_C = cache.C if cache is not None else None
+    init_n = cache.n if cache is not None else None
+    num, C_new = ssd_scan(i_g[..., None] * v, log_f, k, q,
+                          initial_state=init_C)
+    den, n_new = ssd_scan(
+        i_g[..., None] * jnp.ones((B, T, H, 1), v.dtype), log_f, k, q,
+        initial_state=init_n,
+    )
+    y = num / jnp.maximum(jnp.abs(den), 1.0)
+    y = y.reshape(B, T, di).astype(x.dtype)
+    y = rms_norm(p["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ p["down"]
+    new_cache = (
+        MLSTMCache(conv_tail, C_new, n_new) if cache is not None else None
+    )
+    return x + out, new_cache
+
+
+# ================================================================== sLSTM
+def slstm_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    P = d // H
+    ff = int(4 * d / 3 / 64) * 64 or 64
+    return {
+        "norm": Spec((d,), ("embed",), init="ones"),
+        "wx": Spec((d, 4 * d), ("embed", "mlp")),          # z,i,f,o pre-acts
+        "wr": Spec((H, P, 4 * P), (None, None, None), scale=0.5),
+        "bias": Spec((4 * d,), (None,), init="zeros"),
+        "out_norm": Spec((d,), ("embed",), init="ones"),
+        "ff_norm": Spec((d,), ("embed",), init="ones"),
+        "ff_up": Spec((d, 2 * ff), ("embed", "mlp")),
+        "ff_down": Spec((ff, d), ("mlp", "embed"), scale=0.5),
+    }
+
+
+class SLSTMCache(NamedTuple):
+    c: jax.Array  # (B, H, P)
+    n: jax.Array  # (B, H, P)
+    h: jax.Array  # (B, H, P)
+    m: jax.Array  # (B, H, P) stabilizer
+
+
+def init_slstm_cache(cfg: ArchConfig, batch: int, dtype) -> SLSTMCache:
+    H = cfg.n_heads
+    P = cfg.d_model // H
+    z = jnp.zeros((batch, H, P), jnp.float32)
+    return SLSTMCache(z, z, z, z - 10.0)
+
+
+def _slstm_cell(carry, pre, H, P):
+    """pre: (B, H, P, 4) pre-activations [z, i, f, o] (recurrent term added)."""
+    c, n, h, m = carry
+    z_t = jnp.tanh(pre[..., 0])
+    i_t = pre[..., 1]
+    f_t = pre[..., 2]
+    o_t = jax.nn.sigmoid(pre[..., 3])
+    logf = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(logf + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    c = f_p * c + i_p * z_t
+    n = jnp.maximum(f_p * n + i_p, jnp.exp(-m_new))
+    h = o_t * c / n
+    return (c, n, h, m_new)
+
+
+def slstm_apply(
+    p: dict, x: jax.Array, cfg: ArchConfig,
+    cache: Optional[SLSTMCache] = None,
+):
+    B, T, D = x.shape
+    H = cfg.n_heads
+    P = D // H
+    hin = rms_norm(p["norm"], x, cfg.norm_eps)
+    pre_x = (hin @ p["wx"] + p["bias"]).reshape(B, T, H, P, 4)
+    carry0 = (
+        (cache.c, cache.n, cache.h, cache.m)
+        if cache is not None
+        else tuple(
+            jnp.zeros((B, H, P), jnp.float32) if i != 3
+            else jnp.full((B, H, P), -10.0, jnp.float32)
+            for i in range(4)
+        )
+    )
+
+    def step(carry, pre_t):
+        _, _, h_prev, _ = carry
+        rec = jnp.einsum(
+            "bhp,hpq->bhq", h_prev, p["wr"].astype(jnp.float32)
+        ).reshape(B, H, P, 4)
+        carry = _slstm_cell(carry, pre_t.astype(jnp.float32) + rec, H, P)
+        return carry, carry[2]
+
+    carry, hs = jax.lax.scan(step, carry0, pre_x.transpose(1, 0, 2, 3, 4))
+    y = hs.transpose(1, 0, 2, 3).reshape(B, T, D).astype(x.dtype)
+    y = rms_norm(p["out_norm"], y, cfg.norm_eps)
+    x = x + y
+    # gated FFN sublayer
+    h2 = rms_norm(p["ff_norm"], x, cfg.norm_eps)
+    u, g = jnp.split(h2 @ p["ff_up"], 2, axis=-1)
+    x = x + (jax.nn.gelu(u) * g) @ p["ff_down"]
+    new_cache = SLSTMCache(*carry) if cache is not None else None
+    return x, new_cache

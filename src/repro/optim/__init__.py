@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamW, AdamWConfig, cosine_schedule
+
+__all__ = ["AdamW", "AdamWConfig", "cosine_schedule"]

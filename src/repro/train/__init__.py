@@ -1,0 +1,3 @@
+from repro.train.train_loop import TrainState, make_train_step, train_init
+
+__all__ = ["TrainState", "make_train_step", "train_init"]

@@ -1,0 +1,44 @@
+"""Serving: batched prefill + decode with fixed-capacity caches.
+
+``make_serve_fns`` returns jit-able (prefill, decode_step); the launcher
+shards the cache over the mesh (heads/latent over 'model', batch over
+'data').  ``decode_tokens`` drives a simple greedy loop for the examples.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+
+def make_serve_fns(model: Model) -> Tuple[Callable, Callable]:
+    def prefill(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    def decode_step(params, tokens, cache, cache_len):
+        return model.decode_step(params, tokens, cache, cache_len)
+
+    return prefill, decode_step
+
+
+def greedy_decode(
+    model: Model, params, prompt_batch, *, s_max: int, steps: int,
+    cache_dtype=jnp.float32,
+):
+    """Greedy generation for examples/tests (host loop, jitted steps)."""
+    B = jax.tree.leaves(prompt_batch)[0].shape[0]
+    cache = model.init_cache(batch=B, s_max=s_max, dtype=cache_dtype)
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step)
+    logits, cache, length = prefill(params, prompt_batch, cache)
+    cache_len = jnp.asarray(length, jnp.int32)
+    out = []
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    for _ in range(steps):
+        out.append(tok)
+        logits, cache, cache_len = decode(params, tok, cache, cache_len)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    return jnp.concatenate(out, axis=1)

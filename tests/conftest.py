@@ -1,0 +1,8 @@
+import os
+
+# Tests see the real single-CPU device; ONLY launch/dryrun.py forces 512.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,60 @@
+"""Logistic-regression concurrency predictor (paper §4.3, §6.6)."""
+import numpy as np
+
+from repro.core import (
+    CLASSES,
+    GOLibrary,
+    GemmDesc,
+    Predictor,
+    accuracy_by_available,
+    gemm_features,
+    generate_gemm_pool,
+    profile_dataset,
+    train_predictor,
+)
+
+
+def _dataset(n=256, seed=5):
+    lib = GOLibrary()
+    pool = generate_gemm_pool(n, seed=seed)
+    X, y = profile_dataset(pool, lib)
+    return lib, pool, X, y
+
+
+def test_features_shape_and_finite():
+    lib = GOLibrary()
+    x = gemm_features(GemmDesc(4096, 512, 1024), lib)
+    assert x.shape == (15,) and np.isfinite(x).all()
+
+
+def test_training_beats_majority_class():
+    _, _, X, y = _dataset()
+    rng = np.random.default_rng(0)
+    idx = rng.permutation(len(X))
+    ntr = int(0.9 * len(X))
+    pred = train_predictor(X[idx[:ntr]], y[idx[:ntr]])
+    acc = accuracy_by_available(pred, X[idx[ntr:]], y[idx[ntr:]])
+    majority = max(np.bincount(np.minimum(np.asarray(CLASSES)[y], 16))) / len(y)
+    assert acc[16] > majority - 0.05  # must at least match majority
+    assert acc[2] >= acc[16] - 0.05   # fewer classes ⇒ no harder
+
+
+def test_min_available_rule():
+    """Paper Fig. 8: executed CD = min(predicted, available)."""
+    _, _, X, y = _dataset(n=128, seed=9)
+    pred = train_predictor(X, y, epochs=100)
+    for avail in (1, 2, 4, 8, 16):
+        cds = pred.predict_cd(X, available=avail)
+        assert (cds <= avail).all()
+        assert set(np.unique(cds)).issubset(set(CLASSES))
+
+
+def test_save_load_roundtrip(tmp_path):
+    _, _, X, y = _dataset(n=64, seed=2)
+    pred = train_predictor(X, y, epochs=50)
+    p = tmp_path / "predictor.json"
+    pred.save(p)
+    pred2 = Predictor.load(p)
+    np.testing.assert_allclose(
+        pred.probabilities(X), pred2.probabilities(X), rtol=1e-6
+    )

@@ -1,0 +1,62 @@
+"""RC tuner + GO library behaviour (paper §4.2, Fig. 11)."""
+import numpy as np
+
+from repro.core import (
+    DEFAULT_SPEC,
+    GemmDesc,
+    GOLibrary,
+    generate_gemm_pool,
+    go_kernel_properties,
+    tune_gemm,
+)
+from repro.core.tuner import CANDIDATE_TILES, CDS, tune_rc
+
+
+def test_entry_fully_populated():
+    e = tune_gemm(GemmDesc(4096, 128, 1024))
+    assert e.isolated in CANDIDATE_TILES
+    assert set(e.go) == set(CDS)
+    assert set(e.speedup) == set(CDS)
+    assert e.preferred_cd() in (1,) + CDS
+
+
+def test_rc_winner_feasible_under_budget():
+    d = GemmDesc(2048, 2048, 4096)
+    for frac in (1.0, 0.5, 0.25):
+        t = tune_rc(d, frac)
+        assert t.vmem_bytes(d.in_bytes) <= DEFAULT_SPEC.vmem_bytes * frac
+
+
+def test_go_kernels_reduce_waves_or_traffic():
+    """Paper Result-3: GO kernels trend to fewer waves / less traffic."""
+    pool = generate_gemm_pool(80, seed=3)
+    lib = GOLibrary()
+    ratios_w, ratios_t, n_unique = [], [], 0
+    for d in pool:
+        e = lib.get(d)
+        for cd in (2, 16):
+            p = go_kernel_properties(d, e, cd)
+            if p["unique_kernel"]:
+                n_unique += 1
+                ratios_w.append(p["waves_ratio"])
+                ratios_t.append(p["traffic_ratio"])
+    assert n_unique > 0, "no GEMM chose a unique GO kernel"
+    # the *median* GO kernel must not be worse on both axes
+    assert np.median(np.minimum(ratios_w, ratios_t)) <= 1.0
+
+
+def test_preferred_cd_threshold():
+    e = tune_gemm(GemmDesc(8192, 8192, 8192))  # compute-bound monster
+    assert e.preferred_cd() == 1  # no ≥5% win from concurrency
+
+
+def test_library_roundtrip(tmp_path):
+    lib = GOLibrary()
+    d = GemmDesc(1024, 1024, 1024)
+    e = lib.get(d)
+    p = tmp_path / "golib.json"
+    lib.save(p)
+    lib2 = GOLibrary(p)
+    e2 = lib2.get(d)
+    assert e2.isolated == e.isolated and e2.go == e.go
+    assert abs(e2.speedup[16] - e.speedup[16]) < 1e-9

@@ -1,0 +1,62 @@
+"""Call-graph HLO cost walker: synthetic-module unit tests + a real lowering."""
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_cost import parse_hlo, total_costs
+
+SYNTH = """
+HloModule test
+
+%body.1 (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %dot.1 = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%dot.1), channel_id=1
+  ROOT %t = (s32[], f32[8,16]) tuple(%i, %ar)
+}
+
+%cond.1 (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(10)
+  ROOT %cmp = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[8,16]) tuple(%z, %a)
+  %w2 = (s32[], f32[8,16]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%w2), index=1
+}
+"""
+
+
+def test_while_trip_count_multiplies_body():
+    costs = total_costs(SYNTH)
+    # one dot of 2*8*16*16 = 4096 flops, x10 trips
+    assert costs["walked_flops"] == 4096 * 10
+    # all-reduce 8*16*4 bytes x10
+    assert costs["walked_coll_total"] == 8 * 16 * 4 * 10
+
+
+def test_parse_identifies_entry_and_constants():
+    comps = parse_hlo(SYNTH)
+    assert comps["__entry__"].name == "%main".lstrip("%")
+    assert comps["cond.1"].max_const == 10
+
+
+def test_real_lowering_scan_costs_scale_with_trips():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+
+    x = jnp.ones((4, 32))
+    w = jnp.ones((32, 32))
+    hlo = jax.jit(f).lower(x, w).compile().as_text()
+    costs = total_costs(hlo)
+    assert costs["walked_flops"] == 2 * 4 * 32 * 32 * 7
