@@ -37,14 +37,24 @@ def main(argv=None):
     prompt = make_batch(cfg, shape, 0)
     prompt.pop("labels")
 
+    # Shadow-dispatch each decode step's expert/attention GEMMs through the
+    # online concurrency runtime (DESIGN.md §10) and report what it did.
+    from repro.runtime import Runtime
+    runtime = Runtime()
+
     t0 = time.time()
     toks = greedy_decode(
         model, params, prompt,
         s_max=args.prompt_len + args.gen + 1, steps=args.gen,
+        runtime=runtime, tenant=cfg.name,
     )
     dt = time.time() - t0
     print(f"[serve_moe] batch={args.batch} prompt={args.prompt_len} "
           f"gen={args.gen}: {args.batch * args.gen / dt:.1f} tok/s")
+    tele = runtime.telemetry.summary()
+    print(f"[serve_moe] runtime: mean CD {tele['mean_cd']}, modes "
+          f"{tele['modes']}, plan-cache hit rate "
+          f"{tele['plan_cache_hit_rate']:.2f}")
     print(f"[serve_moe] sample continuation: {toks[0].tolist()}")
     assert toks.shape == (args.batch, args.gen)
     assert bool(jnp.isfinite(toks).all())

@@ -25,7 +25,9 @@ from repro.core.scheduler import (
     CP_OVERHEAD_S,
     ConcurrencyController,
     GemmRequest,
+    GroupPlan,
     Schedule,
+    compat_key,
 )
 from repro.core.tuner import CDS, GOEntry, go_kernel_properties, tune_gemm
 
@@ -35,6 +37,6 @@ __all__ = [
     "GOLibrary", "default_library", "CLASSES", "Predictor",
     "accuracy_by_available", "gemm_features", "generate_gemm_pool",
     "profile_dataset", "train_predictor", "CP_OVERHEAD_S",
-    "ConcurrencyController", "GemmRequest", "Schedule", "CDS", "GOEntry",
-    "go_kernel_properties", "tune_gemm",
+    "ConcurrencyController", "GemmRequest", "GroupPlan", "Schedule",
+    "compat_key", "CDS", "GOEntry", "go_kernel_properties", "tune_gemm",
 ]

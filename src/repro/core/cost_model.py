@@ -1,9 +1,10 @@
 """Calibrated analytical TPU cost model.
 
 This is the measurement substrate for GOLDYLOC on a CPU-only container
-(DESIGN.md §2): kernel-grain latencies are derived from a three-term
-roofline over the *tile config*, with explicit modeling of the two
-mechanisms the paper shows drive concurrency behaviour:
+(DESIGN.md §2, which also defines the GPU-resource → TPU-resource
+mapping): kernel-grain latencies are derived from a three-term roofline
+over the *tile config*, with explicit modeling of the two mechanisms the
+paper shows drive concurrency behaviour:
 
 1. **HBM traffic vs tile shape** — blocked matmul re-reads panels
    `tiles_n·M·K + tiles_m·K·N`; larger tiles ⇒ fewer re-reads (paper Fig. 4
@@ -62,7 +63,9 @@ RC_FRACTIONS = {"GPU": 1.0, "GPU/2": 0.5, "GPU/4": 0.25}
 
 @dataclass(frozen=True)
 class KernelStats:
-    """Per-(GEMM, tile) features — the paper's #WGs / occupancy / #waves."""
+    """Per-(GEMM, tile) features — the paper's #WGs / occupancy / #waves,
+    re-expressed for TPU (DESIGN.md §2); consumed by the predictor's
+    feature vector (DESIGN.md §4) and the tuner (DESIGN.md §3)."""
 
     n_tiles: int          # = #WGs
     waves: float          # pipeline waves (tiles / in-flight slots)

@@ -1,4 +1,4 @@
-"""GO GEMM library — paper §4.2.2.
+"""GO GEMM library — paper §4.2.2 (DESIGN.md §3).
 
 The baseline library maps a GEMM input to its isolated-tuned kernel; the GO
 library additionally returns, per concurrency degree, a pointer to the
@@ -13,7 +13,7 @@ import os
 import threading
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Dict, Optional
+from typing import Dict, Optional, Sequence
 
 from repro.core.cost_model import DEFAULT_SPEC, TPUSpec
 from repro.core.gemm_desc import GemmDesc
@@ -58,6 +58,22 @@ class GOLibrary:
 
     def tile(self, desc: GemmDesc, cd: int = 1) -> TileConfig:
         return self.get(desc).tile_for_cd(cd)
+
+    def prewarm(self, descs: Sequence[GemmDesc]) -> int:
+        """Tune ahead of traffic (DESIGN.md §10): the serving runtime calls
+        this with the GEMMs a workload is about to issue so the one-time RC
+        tuning cost never lands on a live request.  Returns the number of
+        newly tuned entries."""
+        fresh = 0
+        for d in descs:
+            with self._lock:
+                known = d.key() in self._entries
+            if not known:
+                self.get(d)
+                fresh += 1
+        if fresh and self.path:
+            self.save()
+        return fresh
 
     def __len__(self) -> int:
         return len(self._entries)

@@ -1,12 +1,16 @@
-"""Lightweight dynamic concurrency predictor — paper §4.3.
+"""Lightweight dynamic concurrency predictor — paper §4.3 (DESIGN.md §4).
 
 Multi-class (one-vs-rest softmax) logistic regression in pure JAX:
     P = softmax(X @ W);  CD_exec = min(argmax P, available GEMMs)
-Classes: {1S, 2P, 4P, 8P, 16P}.  Features (paper Fig. 7b): GEMM dims
-(M, N, K) + per-CD kernel features (#WGs, occupancy, #waves) of the GO
-kernels — capturing input, implementation, and hardware properties.
-Min-max normalized; trained offline once per chip spec on a profiled
-dataset of 1072 GEMMs (paper §5.2 count), 90/10 split.
+Classes: {1S, 2P, 4P, 8P, 16P}.  Features (paper Fig. 7b): log2 GEMM dims
+(M, N, K) + per-CD kernel features (log2 #WGs, occupancy, log2 #waves) of
+the GO kernels — capturing input, implementation, and hardware
+properties.  That is 3 + 3·|CDS| dims — 15 with the default CDS of
+(2, 4, 8, 16); `gemm_features` derives the count from CDS, so extending
+the class list extends the vector.  Min-max normalized; trained offline
+once per chip spec on a profiled dataset of 1072 GEMMs (paper §5.2
+count), 90/10 split.  The TPU meanings of #WGs/occupancy/#waves are
+defined in DESIGN.md §2.
 """
 from __future__ import annotations
 
@@ -31,7 +35,8 @@ CLASSES = (1,) + tuple(CDS)  # 1S, 2P, 4P, 8P, 16P
 def gemm_features(
     desc: GemmDesc, lib: GOLibrary, spec: TPUSpec = DEFAULT_SPEC
 ) -> np.ndarray:
-    """15-dim feature vector: log2(M,N,K) + per-CD (log2 #WGs, occ, log2 waves)."""
+    """Feature vector (3 + 3·|CDS| dims; 15 by default): log2(M,N,K) +
+    per-CD (log2 #WGs, occupancy, log2 #waves) — see DESIGN.md §4."""
     entry = lib.get(desc)
     feats = [math.log2(desc.M), math.log2(desc.N), math.log2(desc.K)]
     for cd in CDS:

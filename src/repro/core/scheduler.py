@@ -16,8 +16,13 @@ The controller also implements the fusion-vs-concurrency policy (§6.11):
 shared-input GEMMs (QKV) may be fused into one wide GEMM instead of grouped,
 whichever the cost model favours.
 
-`plan()` is pure logic (unit-testable, used by every benchmark);
-`execute()` runs the plan through the real kernels.
+`plan()` is pure logic (unit-testable, used by every benchmark); it is a
+loop over `plan_group()`, which plans exactly ONE launch from the queue
+head.  The online serving runtime (`repro.runtime`, DESIGN.md §10) plans
+whole class queues via `plan(descs, available=...)` and memoizes the
+resulting `Schedule`s; `execute_plan()` runs a precomputed `Schedule`
+(e.g. a plan-cache hit) through the real kernels without re-planning,
+while `execute()` is plan + execute in one call.
 """
 from __future__ import annotations
 
@@ -80,6 +85,18 @@ def _compatible(a: GemmDesc, b: GemmDesc) -> bool:
     )
 
 
+def compat_key(d: GemmDesc) -> str:
+    """Compatibility-class id: equal keys ⟺ plannable in one launch (§6.7).
+
+    For plain GEMMs (batch == 1) equal keys coincide with `_compatible`.
+    Batched GEMMs (§6.7 B-GEMM) class by their full key: they only pool
+    with *identical* descriptors (the `same` branch of `plan_group`, which
+    `_compatible` deliberately excludes)."""
+    if d.batch != 1:
+        return d.key()
+    return f"{d.N}_{d.K}_{int(d.ta)}{int(d.tb)}_{d.dtype}"
+
+
 class ConcurrencyController:
     def __init__(
         self,
@@ -87,11 +104,17 @@ class ConcurrencyController:
         predictor: Predictor | None = None,
         spec: TPUSpec = DEFAULT_SPEC,
         max_cd: int = 16,
+        go_tiles: bool = True,
     ):
-        self.lib = library or default_library()
+        # NB: `library or default_library()` would discard an *empty*
+        # GOLibrary (its __len__ makes it falsy) — compare to None.
+        self.lib = library if library is not None else default_library()
         self.predictor = predictor
         self.spec = spec
         self.max_cd = max_cd
+        # go_tiles=False plans grouped launches with the isolated-tuned tile
+        # (the paper's "default" baseline; used by benchmark baselines).
+        self.go_tiles = go_tiles
 
     # ------------------------------------------------------------ predict
     def preferred_cd(self, desc: GemmDesc, available: int) -> int:
@@ -105,44 +128,67 @@ class ConcurrencyController:
         return min(cd, max(c for c in CLASSES if c <= max(available, 1)))
 
     # --------------------------------------------------------------- plan
-    def plan(self, descs: Sequence[GemmDesc]) -> Schedule:
+    def plan_group(
+        self,
+        descs: Sequence[GemmDesc],
+        pending: Sequence[int],
+        available: int | None = None,
+    ) -> tuple[GroupPlan, List[int]]:
+        """Plan exactly ONE launch from the head of ``pending`` (§4.4).
+
+        The per-dispatch unit of the dynamic logic: inspect the queue
+        head, pool its compatible followers, predict CD, and emit one
+        `GroupPlan`.  Returns the plan and the remaining pending indices.
+        `plan()` is a loop over this.  ``available`` caps parallelism
+        below ``max_cd`` — the serving runtime passes its live
+        available-slot count through `plan()` here
+        (CD_exec = min(CD_pred, avail)).
+        """
+        pending = list(pending)
+        cap = self.max_cd if available is None else max(1, min(self.max_cd, available))
+        head = descs[pending[0]]
+        same = [i for i in pending if descs[i] == head]
+        compat = [i for i in pending if _compatible(descs[i], head)]
+        pool = same if len(same) >= len(compat) else compat
+        hetero = pool is compat and len(compat) > len(same)
+
+        cd = self.preferred_cd(head, available=min(len(pool), cap))
+        if hetero:
+            # §6.7: every unique member must prefer this CD, else split
+            # into the homogeneous subset.
+            uniq = {descs[i].key(): descs[i] for i in pool}
+            if not all(
+                self.preferred_cd(u, available=cd) >= cd
+                for u in uniq.values()
+            ):
+                pool, hetero = same, False
+                cd = self.preferred_cd(head, available=min(len(pool), cap))
+
+        take = pool[: max(cd, 1)]
+        cd_exec = len(take)
+        entry = self.lib.get(head)
+        tile = entry.tile_for_cd(cd_exec) if self.go_tiles else entry.isolated
+        members = [(descs[i], tile) for i in take]
+        if cd_exec == 1:
+            mode = "single"
+            t = isolated_time(head, self.lib.get(head).isolated, self.spec)
+            tile = self.lib.get(head).isolated
+        else:
+            mode = "ragged" if hetero else "grouped"
+            t = group_time(members, self.spec)
+        gp = GroupPlan(indices=take, cd=cd_exec, tile=tile, mode=mode,
+                       modeled_time_s=t)
+        taken = set(take)
+        return gp, [i for i in pending if i not in taken]
+
+    def plan(
+        self, descs: Sequence[GemmDesc], available: int | None = None
+    ) -> Schedule:
         sched = Schedule(cp_overhead_s=CP_OVERHEAD_S)
         pending = list(range(len(descs)))
         while pending:
-            head = descs[pending[0]]
-            same = [i for i in pending if descs[i] == head]
-            compat = [i for i in pending if _compatible(descs[i], head)]
-            pool = same if len(same) >= len(compat) else compat
-            hetero = pool is compat and len(compat) > len(same)
-
-            cd = self.preferred_cd(head, available=min(len(pool), self.max_cd))
-            if hetero:
-                # §6.7: every unique member must prefer this CD, else split
-                # into the homogeneous subset.
-                uniq = {descs[i].key(): descs[i] for i in pool}
-                if not all(
-                    self.preferred_cd(u, available=cd) >= cd
-                    for u in uniq.values()
-                ):
-                    pool, hetero = same, False
-                    cd = self.preferred_cd(head, available=min(len(pool), self.max_cd))
-
-            take = pool[: max(cd, 1)]
-            cd_exec = len(take)
-            tile = self.lib.get(head).tile_for_cd(cd_exec)
-            members = [(descs[i], tile) for i in take]
-            if cd_exec == 1:
-                mode = "single"
-                t = isolated_time(head, self.lib.get(head).isolated, self.spec)
-                tile = self.lib.get(head).isolated
-            else:
-                mode = "ragged" if hetero else "grouped"
-                t = group_time(members, self.spec)
-            sched.groups.append(
-                GroupPlan(indices=take, cd=cd_exec, tile=tile, mode=mode,
-                          modeled_time_s=t)
-            )
-            pending = [i for i in pending if i not in set(take)]
+            gp, pending = self.plan_group(descs, pending, available=available)
+            sched.groups.append(gp)
         return sched
 
     # ---------------------------------------------------- fusion policy
@@ -165,6 +211,18 @@ class ConcurrencyController:
     ) -> List[jax.Array]:
         descs = [r.desc for r in requests]
         sched = self.plan(descs)
+        return self.execute_plan(requests, sched, interpret=interpret)
+
+    def execute_plan(
+        self,
+        requests: Sequence[GemmRequest],
+        sched: Schedule,
+        interpret: bool | None = None,
+    ) -> List[jax.Array]:
+        """Run a precomputed `Schedule` through the real kernels.
+
+        Separated from `execute()` so the serving runtime can replay a
+        plan-cache hit without paying the planning pass again."""
         outs: List[Optional[jax.Array]] = [None] * len(requests)
         for gp in sched.groups:
             reqs = [requests[i] for i in gp.indices]

@@ -9,6 +9,13 @@ import os
 from contextlib import contextmanager
 
 import jax
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams; support both so the
+# kernels import on every toolchain the container may carry.
+tpu_compiler_params = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
 
 _FORCED: bool | None = None
 

@@ -32,6 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.dispatch import tpu_compiler_params
+
 
 # --------------------------------------------------------------------------
 # Homogeneous grouped GEMM
@@ -77,7 +79,7 @@ def grouped_matmul_pallas(
         out_specs=pl.BlockSpec((1, bm, bn), lambda i, j, g, k: (g, i, j)),
         out_shape=jax.ShapeDtypeStruct((G, M, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -143,7 +145,7 @@ def ragged_matmul_pallas(
         functools.partial(_ragged_kernel, n_k=n_k),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((Mtotal, N), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary", "parallel", "arbitrary"),
         ),
         interpret=interpret,

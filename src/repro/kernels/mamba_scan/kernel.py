@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.dispatch import tpu_compiler_params
+
 
 def _mamba_kernel(
     xd_ref,    # (1, L, P)  dt * x
@@ -100,7 +102,7 @@ def mamba_scan_pallas(
             jax.ShapeDtypeStruct((BH, N, P), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -2,6 +2,10 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --reduced \\
         --batch 4 --prompt-len 32 --gen 16
+
+``--runtime`` routes each decode step's QKV/FFN GEMMs through the online
+concurrency runtime (`repro.runtime`, DESIGN.md §10) and prints its
+telemetry summary (CD / mode mix / plan-cache hit rate) after the run.
 """
 from __future__ import annotations
 
@@ -27,6 +31,8 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--runtime", action="store_true",
+                    help="shadow-dispatch decode GEMMs via repro.runtime")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -41,16 +47,23 @@ def main(argv=None):
     prompt = make_batch(cfg, shape, 0)
     prompt.pop("labels", None)
 
+    runtime = None
+    if args.runtime:
+        from repro.runtime import Runtime
+        runtime = Runtime()
+
     t0 = time.time()
     toks = greedy_decode(
         model, params, prompt, s_max=args.prompt_len + args.gen + 1,
-        steps=args.gen,
+        steps=args.gen, runtime=runtime, tenant=cfg.name,
     )
     dt = time.time() - t0
     print(f"[serve] {cfg.name}: batch={args.batch} prompt={args.prompt_len} "
           f"gen={args.gen} -> {toks.shape} in {dt:.1f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s)")
     print("first sequence:", toks[0].tolist())
+    if runtime is not None:
+        print(f"[serve] runtime telemetry: {runtime.telemetry.summary()}")
     return toks
 
 

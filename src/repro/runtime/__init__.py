@@ -1,0 +1,22 @@
+"""Online concurrent-GEMM serving runtime (DESIGN.md §10).
+
+Multi-tenant admission queue + plan cache around the dynamic concurrency
+logic of `repro.core.scheduler`, with telemetry and arrival traces for
+closed-loop replay.  See `benchmarks/serving.py` for the end-to-end loop.
+"""
+from repro.runtime.integration import (
+    decode_step_descs,
+    decode_step_requests,
+    prewarm_decode,
+    submit_decode_step,
+)
+from repro.runtime.runtime import Launch, Runtime, RuntimeConfig, Ticket
+from repro.runtime.telemetry import GroupRecord, Telemetry
+from repro.runtime.traces import bursty_trace, poisson_trace, uniform_trace
+
+__all__ = [
+    "Launch", "Runtime", "RuntimeConfig", "Ticket", "GroupRecord",
+    "Telemetry", "bursty_trace", "poisson_trace", "uniform_trace",
+    "decode_step_descs", "decode_step_requests", "prewarm_decode",
+    "submit_decode_step",
+]

@@ -1,0 +1,145 @@
+"""Route model decode-step GEMMs through the serving runtime — DESIGN.md §10.5.
+
+Serving is where the paper's scenario actually happens: each decode step
+of each live request issues a bundle of small-M GEMMs (QKV / attention-out
+/ FFN, or per-expert FFNs for MoE), and how many of them are pending at
+once depends on traffic — exactly the "available parallelism only known at
+runtime" setting of §4.4.
+
+`decode_step_requests` enumerates one representative layer's decode-step
+GEMMs for an `ArchConfig` (M = live batch), applying the §6.11
+fusion-vs-concurrency policy first: shared-input projections (QKV; FFN
+gate+up) are submitted as one wide fused GEMM when the cost model prefers
+fusion, and as separate concurrent GEMMs when it prefers grouping.  The
+jitted model still does the tensor math; the runtime is the dispatch-layer
+shadow that plans, groups, and meters those same GEMMs (telemetry: CD,
+mode, plan-cache hit rate), and executes them for real when
+``RuntimeConfig.execute`` is set.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import List, Sequence, Tuple
+
+from repro.core.gemm_desc import GemmDesc
+from repro.core.scheduler import ConcurrencyController, GemmRequest
+from repro.runtime.runtime import Runtime, Ticket
+
+
+def _shared_input_requests(
+    ctrl: ConcurrencyController,
+    descs: Sequence[GemmDesc],
+    tag: str,
+) -> List[GemmRequest]:
+    """Apply §6.11 to a shared-input bundle: one fused request or N grouped."""
+    if len(descs) < 2:
+        return [GemmRequest(desc=d, tag=tag) for d in descs]
+    choice, _, _ = ctrl.plan_shared_input(list(descs))
+    if choice == "fuse":
+        fused = replace(descs[0], N=sum(d.N for d in descs))
+        return [GemmRequest(desc=fused, tag=f"{tag}-fused")]
+    return [GemmRequest(desc=d, tag=tag) for d in descs]
+
+
+def decode_step_descs(cfg, batch: int, dtype: str = "bf16") -> List[Tuple[str, List[GemmDesc]]]:
+    """(tag, shared-input bundle) pairs for one decode step of one layer.
+
+    Bundles listed together share their A operand (the hidden state), so
+    they are §6.11 fusion candidates; distinct bundles are only groupable
+    via §6.7 compatibility classes."""
+    M, D = batch, cfg.d_model
+    hd = cfg.resolved_head_dim
+    out: List[Tuple[str, List[GemmDesc]]] = []
+
+    if cfg.attn_type == "mla":
+        # MLA (DeepSeek-V2): low-rank KV/Q down-projections + up-projection.
+        q_n = cfg.n_heads * (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+        kv_n = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+        if cfg.q_lora_rank:
+            out.append(("mla-down", [GemmDesc(M, cfg.q_lora_rank, D, dtype=dtype),
+                                     GemmDesc(M, kv_n, D, dtype=dtype)]))
+            out.append(("mla-q-up", [GemmDesc(M, q_n, cfg.q_lora_rank, dtype=dtype)]))
+        else:
+            out.append(("mla-down", [GemmDesc(M, q_n, D, dtype=dtype),
+                                     GemmDesc(M, kv_n, D, dtype=dtype)]))
+        out.append(("attn-out", [GemmDesc(M, D, cfg.n_heads * cfg.v_head_dim,
+                                          dtype=dtype)]))
+    elif cfg.family in ("ssm",) or (cfg.family == "hybrid" and cfg.ssm_state):
+        # Mamba2-style block: wide in-projection + out-projection.
+        out.append(("ssm-in", [GemmDesc(M, 2 * cfg.ssm_d_inner, D, dtype=dtype)]))
+        out.append(("ssm-out", [GemmDesc(M, D, cfg.ssm_d_inner, dtype=dtype)]))
+    else:
+        # GQA attention: Q + K + V share the hidden state (§6.11 QKV case).
+        out.append(("qkv", [GemmDesc(M, cfg.n_heads * hd, D, dtype=dtype),
+                            GemmDesc(M, cfg.n_kv_heads * hd, D, dtype=dtype),
+                            GemmDesc(M, cfg.n_kv_heads * hd, D, dtype=dtype)]))
+        out.append(("attn-out", [GemmDesc(M, D, cfg.n_heads * hd, dtype=dtype)]))
+
+    if cfg.n_routed_experts:
+        # Active routed experts are genuinely independent GEMMs — the §6.7
+        # concurrency pool.  gate+up share the expert input (§6.11).
+        ff = cfg.moe_d_ff
+        for e in range(cfg.moe_top_k):
+            out.append((f"expert{e}-up", [GemmDesc(M, ff, D, dtype=dtype),
+                                          GemmDesc(M, ff, D, dtype=dtype)]))
+            out.append((f"expert{e}-down", [GemmDesc(M, D, ff, dtype=dtype)]))
+        if cfg.n_shared_experts:
+            # the model implements shared experts as ONE dense MLP of width
+            # n_shared * moe_d_ff (models/moe.py:moe_specs) — mirror that
+            sff = cfg.n_shared_experts * ff
+            out.append(("shared-up", [GemmDesc(M, sff, D, dtype=dtype),
+                                      GemmDesc(M, sff, D, dtype=dtype)]))
+            out.append(("shared-down", [GemmDesc(M, D, sff, dtype=dtype)]))
+    elif cfg.d_ff > 0:  # xLSTM-style blocks have no separate FFN
+        ff = cfg.d_ff
+        out.append(("ffn-up", [GemmDesc(M, ff, D, dtype=dtype),
+                               GemmDesc(M, ff, D, dtype=dtype)]))
+        out.append(("ffn-down", [GemmDesc(M, D, ff, dtype=dtype)]))
+    return out
+
+
+def decode_step_requests(
+    ctrl: ConcurrencyController,
+    cfg,
+    batch: int,
+    dtype: str = "bf16",
+    fuse_policy: bool = True,
+) -> List[GemmRequest]:
+    """One decode step's GEMM requests.
+
+    ``fuse_policy=True`` applies §6.11 to each shared-input bundle (the
+    GOLDYLOC path); ``False`` emits the raw unfused GEMM stream — what a
+    framework dispatches by default, i.e. the baseline workload."""
+    reqs: List[GemmRequest] = []
+    for tag, bundle in decode_step_descs(cfg, batch, dtype):
+        if fuse_policy:
+            reqs += _shared_input_requests(ctrl, bundle, tag)
+        else:
+            reqs += [GemmRequest(desc=d, tag=tag) for d in bundle]
+    return reqs
+
+
+def prewarm_decode(
+    runtime: Runtime, cfg, batches: Sequence[int], dtype: str = "bf16"
+) -> int:
+    """Tune every GEMM a decode workload can issue before traffic arrives."""
+    descs: List[GemmDesc] = []
+    for b in batches:
+        for r in decode_step_requests(runtime.ctrl, cfg, b, dtype):
+            descs.append(r.desc)
+    return runtime.prewarm(descs)
+
+
+def submit_decode_step(
+    runtime: Runtime,
+    cfg,
+    batch: int,
+    tenant: str = "default",
+    now: float | None = None,
+    dtype: str = "bf16",
+) -> List[Ticket]:
+    """Admit one decode step's GEMMs into the runtime queues."""
+    return [
+        runtime.submit(r, tenant=tenant, now=now)
+        for r in decode_step_requests(runtime.ctrl, cfg, batch, dtype)
+    ]

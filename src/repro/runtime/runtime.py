@@ -1,0 +1,297 @@
+"""Online concurrent-GEMM serving runtime — DESIGN.md §10.
+
+The seed's `ConcurrencyController` is one-shot: every `plan()` call
+re-derives the schedule from scratch, so nothing exercised the paper's
+actual scenario — *varying available parallelism under live load* (§4.4).
+This module is the missing online layer:
+
+- `submit()` admits `GemmRequest`s (tagged with a tenant/stream id) into
+  **per-compatibility-class queues** (`core.scheduler.compat_key`, §6.7).
+- `flush()` runs the lightweight dynamic logic on the queue heads exactly
+  as the paper's CP does — ``CD_exec = min(CD_predicted, available)`` —
+  but through a **plan cache** keyed by the queue signature (canonically
+  sorted desc keys + available slots), so steady-state traffic skips
+  re-planning and re-tuning entirely and `CP_OVERHEAD_S` is amortized.
+- launches are interleaved **round-robin across compatibility classes**,
+  so one tenant's large GEMMs cannot starve another tenant's small ones.
+- `drain()` force-flushes until the queues are empty.
+
+The runtime keeps a modeled device timeline (`device_free_t`) so latency
+accounting works identically in closed-loop replay (virtual clock, the
+serving benchmark) and live shadow dispatch (wall clock, the serve loop).
+Set ``RuntimeConfig.execute=True`` to also run every launch through the
+real pallas kernels (`ConcurrencyController.execute_plan`).
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict, deque
+from dataclasses import dataclass, replace
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.gemm_desc import GemmDesc
+from repro.core.scheduler import (
+    CP_OVERHEAD_S,
+    ConcurrencyController,
+    GemmRequest,
+    GroupPlan,
+    Schedule,
+    compat_key,
+)
+from repro.runtime.telemetry import GroupRecord, Telemetry
+
+Signature = Tuple[Tuple[str, ...], int]
+
+
+@dataclass
+class RuntimeConfig:
+    window_s: float = 2e-3          # batching window before a class is ripe
+    plan_cache_capacity: int = 512  # LRU entries (queue signatures)
+    execute: bool = False           # run launches through the real kernels
+    interpret: bool | None = None   # forwarded to pallas when executing
+
+
+@dataclass
+class Ticket:
+    """Handle returned by `submit()`; filled in by the flush that serves it."""
+
+    seq: int
+    tenant: str
+    request: GemmRequest
+    submit_t: float
+    done_t: Optional[float] = None
+    result: object = None           # jax.Array when executed
+    plan: Optional[GroupPlan] = None
+
+    @property
+    def desc(self) -> GemmDesc:
+        return self.request.desc
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        return None if self.done_t is None else self.done_t - self.submit_t
+
+
+@dataclass
+class Launch:
+    """One bound group: a `GroupPlan` applied to live tickets."""
+
+    plan: GroupPlan
+    tickets: List[Ticket]
+    class_key: str
+    cache_hit: bool
+    start_t: float = 0.0
+    end_t: float = 0.0
+
+
+class Runtime:
+    def __init__(
+        self,
+        controller: ConcurrencyController | None = None,
+        config: RuntimeConfig | None = None,
+        telemetry: Telemetry | None = None,
+        clock=time.monotonic,
+    ):
+        self.ctrl = controller or ConcurrencyController()
+        self.config = config or RuntimeConfig()
+        self.telemetry = telemetry or Telemetry()
+        self.clock = clock
+        self.available = self.ctrl.max_cd
+        self.device_free_t = 0.0
+        self._queues: Dict[str, Deque[Ticket]] = {}
+        self._rr: int = 0               # round-robin cursor over class order
+        self._order: List[str] = []     # class keys in first-seen order
+        self._plan_cache: "OrderedDict[Signature, Schedule]" = OrderedDict()
+        self._seq = 0
+        self._flush_id = 0
+
+    # ------------------------------------------------------------- admit
+    def submit(
+        self,
+        request: GemmRequest | GemmDesc,
+        tenant: str = "default",
+        now: float | None = None,
+    ) -> Ticket:
+        if isinstance(request, GemmDesc):
+            request = GemmRequest(desc=request)
+        now = self.clock() if now is None else now
+        self._seq += 1
+        ticket = Ticket(seq=self._seq, tenant=tenant, request=request,
+                        submit_t=now)
+        key = compat_key(request.desc)
+        if key not in self._queues:
+            self._queues[key] = deque()
+            self._order.append(key)
+        self._queues[key].append(ticket)
+        self.telemetry.record_submit()
+        return ticket
+
+    def set_available(self, n: int) -> None:
+        """Update live available parallelism (other streams/devices taking
+        slots).  Part of the plan-cache key, so stale plans never re-bind."""
+        self.available = max(1, int(n))
+
+    def queue_depths(self) -> Dict[str, int]:
+        return {k: len(q) for k, q in self._queues.items() if q}
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    # ------------------------------------------------------------ prewarm
+    def prewarm(self, descs: Sequence[GemmDesc], plan: bool = True) -> int:
+        """Tune GEMMs ahead of traffic (GOLibrary.prewarm) and optionally
+        pre-populate the plan cache with the all-at-once queue signature.
+
+        Planning cost paid here is recorded as prewarm overhead (not as an
+        online cache miss), so the live hit rate measures steady-state
+        cache behaviour while `cp_overhead_paid_s` still accounts for
+        every plan actually derived."""
+        fresh = self.ctrl.lib.prewarm(descs)
+        if plan and descs:
+            for key in {compat_key(d) for d in descs}:
+                members = [d for d in descs if compat_key(d) == key]
+                _, hit = self._plan_for(sorted(members, key=_canonical_order))
+                if not hit:
+                    self.telemetry.record_prewarm_plan(CP_OVERHEAD_S)
+        return fresh
+
+    # -------------------------------------------------------------- flush
+    def flush(
+        self,
+        now: float | None = None,
+        force: bool = False,
+    ) -> List[Launch]:
+        """Serve every ripe compatibility class (head waited ≥ window_s).
+
+        Classes are visited round-robin starting after the last serviced
+        class; each class's queue is planned (via the plan cache) and its
+        groups are interleaved round-robin into the launch order.
+        """
+        now = self.clock() if now is None else now
+        ripe = [
+            k for k in self._order
+            if self._queues.get(k)
+            and (force or now - self._queues[k][0].submit_t >= self.config.window_s)
+        ]
+        if not ripe:
+            return []
+        self._flush_id += 1
+        self.telemetry.record_flush(self.queue_depths())
+
+        # Rotate so each flush starts service at a different class (fairness).
+        start = self._rr % max(len(self._order), 1)
+        rotated = [k for k in self._order[start:] + self._order[:start] if k in ripe]
+        self._rr = (self._order.index(rotated[0]) + 1) % len(self._order)
+
+        per_class: List[List[Launch]] = []
+        planning_s = 0.0
+        for key in rotated:
+            tickets = sorted(self._queues[key], key=lambda t: _canonical_order(t.desc))
+            self._queues[key].clear()
+            sched, hit = self._plan_for([t.desc for t in tickets])
+            self.telemetry.record_plan(hit, CP_OVERHEAD_S)
+            if not hit:
+                planning_s += CP_OVERHEAD_S
+            per_class.append([
+                Launch(plan=gp, tickets=[tickets[i] for i in gp.indices],
+                       class_key=key, cache_hit=hit)
+                for gp in sched.groups
+            ])
+
+        launches = _interleave(per_class)
+
+        # Modeled single-device timeline; real execution optionally rides it.
+        # Planning cost (cache misses) is hidden behind prior kernels when
+        # the device is busy (§6.5) but delays dispatch when it is idle —
+        # this is where the plan cache buys measurable latency.
+        t = max(self.device_free_t, now + planning_s)
+        for launch in launches:
+            launch.start_t = t
+            t += launch.plan.modeled_time_s
+            launch.end_t = t
+            achieved = self._execute(launch) if self.config.execute else None
+            for ticket in launch.tickets:
+                ticket.done_t = launch.end_t
+                ticket.plan = launch.plan
+            # §6.11 fusion happens before admission (one wide request with a
+            # "-fused" tag); surface it in telemetry instead of "single".
+            mode = launch.plan.mode
+            if mode == "single" and launch.tickets[0].request.tag.endswith("-fused"):
+                mode = "fused"
+            self.telemetry.record_group(GroupRecord(
+                flush_id=self._flush_id,
+                class_key=launch.class_key,
+                tenants=[tk.tenant for tk in launch.tickets],
+                cd=launch.plan.cd,
+                mode=mode,
+                modeled_time_s=launch.plan.modeled_time_s,
+                achieved_time_s=achieved,
+                cache_hit=launch.cache_hit,
+            ))
+        self.device_free_t = t
+        return launches
+
+    def drain(self, now: float | None = None) -> List[Launch]:
+        """Force-flush until every queue is empty."""
+        out: List[Launch] = []
+        while self.pending():
+            out += self.flush(now=now, force=True)
+        return out
+
+    # ---------------------------------------------------------- internals
+    def _plan_for(self, descs: Sequence[GemmDesc]) -> tuple[Schedule, bool]:
+        sig: Signature = (tuple(d.key() for d in descs), self.available)
+        cached = self._plan_cache.get(sig)
+        if cached is not None:
+            self._plan_cache.move_to_end(sig)
+            return cached, True
+        sched = self.ctrl.plan(descs, available=self.available)
+        self._plan_cache[sig] = sched
+        while len(self._plan_cache) > self.config.plan_cache_capacity:
+            self._plan_cache.popitem(last=False)
+        return sched, False
+
+    def _execute(self, launch: Launch) -> Optional[float]:
+        reqs = [t.request for t in launch.tickets]
+        if any(r.a is None or r.b is None for r in reqs):
+            return None
+        if any(r.desc.batch != 1 for r in reqs):
+            # B-GEMMs (§6.7) are modeled but have no grouped execute path
+            # in the kernels yet — stay in shadow (modeled-only) mode.
+            return None
+        mini = Schedule(groups=[replace(
+            launch.plan, indices=list(range(len(reqs))))])
+        t0 = time.perf_counter()
+        outs = self.ctrl.execute_plan(
+            reqs, mini, interpret=self.config.interpret)
+        for o in outs:
+            o.block_until_ready()
+        achieved = time.perf_counter() - t0
+        for ticket, out in zip(launch.tickets, outs):
+            ticket.result = out
+        return achieved
+
+    def invalidate_plans(self) -> None:
+        self._plan_cache.clear()
+
+    @property
+    def plan_cache_size(self) -> int:
+        return len(self._plan_cache)
+
+
+def _canonical_order(d: GemmDesc) -> tuple:
+    """Stable within-class ordering (largest M first) so equal queue
+    contents produce equal signatures regardless of arrival order."""
+    return (-d.M, d.key())
+
+
+def _interleave(per_class: List[List[Launch]]) -> List[Launch]:
+    """Round-robin merge: class A group 1, class B group 1, …, A2, B2, …"""
+    out: List[Launch] = []
+    i = 0
+    while True:
+        row = [groups[i] for groups in per_class if i < len(groups)]
+        if not row:
+            return out
+        out += row
+        i += 1

@@ -1,0 +1,140 @@
+"""Serving-runtime telemetry — DESIGN.md §10.3.
+
+Records what the dynamic logic actually did under live load, the data the
+paper reads off its CP counters: per-group concurrency degree and mode,
+modeled vs achieved latency, plan-cache effectiveness (how much of
+``CP_OVERHEAD_S`` steady-state traffic amortizes away), and queue-depth
+histograms per compatibility class.
+
+Everything is plain Python so the telemetry can run inside the dispatch
+path without touching the device.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class GroupRecord:
+    """One launched group (one `GroupPlan` bound to live requests)."""
+
+    flush_id: int
+    class_key: str
+    tenants: List[str]
+    cd: int
+    mode: str                       # "grouped" | "ragged" | "single" | "fused"
+    modeled_time_s: float
+    achieved_time_s: Optional[float] = None   # wall clock when executed
+    cache_hit: bool = False
+
+    @property
+    def model_error(self) -> Optional[float]:
+        """achieved / modeled — >1 means the model was optimistic."""
+        if self.achieved_time_s is None or self.modeled_time_s <= 0:
+            return None
+        return self.achieved_time_s / self.modeled_time_s
+
+
+@dataclass
+class Telemetry:
+    groups: List[GroupRecord] = field(default_factory=list)
+    cache_hits: int = 0
+    cache_misses: int = 0
+    prewarmed_plans: int = 0
+    flushes: int = 0
+    submitted: int = 0
+    completed: int = 0
+    # depth observed per compatibility class at each flush
+    depth_hist: Counter = field(default_factory=Counter)
+    cp_overhead_paid_s: float = 0.0
+    cp_overhead_saved_s: float = 0.0
+
+    # ------------------------------------------------------------- record
+    def record_submit(self, n: int = 1) -> None:
+        self.submitted += n
+
+    def record_flush(self, queue_depths: Dict[str, int]) -> None:
+        self.flushes += 1
+        for depth in queue_depths.values():
+            self.depth_hist[_bucket(depth)] += 1
+
+    def record_plan(self, hit: bool, overhead_s: float) -> None:
+        if hit:
+            self.cache_hits += 1
+            self.cp_overhead_saved_s += overhead_s
+        else:
+            self.cache_misses += 1
+            self.cp_overhead_paid_s += overhead_s
+
+    def record_prewarm_plan(self, overhead_s: float) -> None:
+        """Offline (pre-traffic) plan derivation: paid, but not an online
+        cache miss — keeps the live hit rate meaningful under prewarm."""
+        self.prewarmed_plans += 1
+        self.cp_overhead_paid_s += overhead_s
+
+    def record_group(self, rec: GroupRecord) -> None:
+        self.groups.append(rec)
+        self.completed += rec.cd
+
+    # ------------------------------------------------------------ derive
+    def cache_hit_rate(self) -> float:
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
+
+    def steady_state_hit_rate(self, skip_frac: float = 0.5) -> float:
+        """Plan-cache hit rate excluding the warm-up: only groups from the
+        last ``1 - skip_frac`` of flushes count.  This is the number the
+        paper's steady-state claim is about — cold-start misses are a
+        one-time cost already reported via `cp_overhead_paid_s`."""
+        if not self.groups:
+            return 0.0
+        cutoff = self.groups[-1].flush_id * skip_frac
+        tail = [g for g in self.groups if g.flush_id > cutoff]
+        return sum(g.cache_hit for g in tail) / max(len(tail), 1)
+
+    def queue_depth_histogram(self) -> Dict[str, int]:
+        """Power-of-two depth buckets, e.g. {"1": 12, "2-3": 40, "4-7": 9}."""
+        return {k: self.depth_hist[k] for k in sorted(self.depth_hist, key=_bucket_lo)}
+
+    def mode_counts(self) -> Dict[str, int]:
+        return dict(Counter(g.mode for g in self.groups))
+
+    def mean_cd(self) -> float:
+        return (
+            sum(g.cd for g in self.groups) / len(self.groups)
+            if self.groups else 0.0
+        )
+
+    def modeled_busy_time_s(self) -> float:
+        return sum(g.modeled_time_s for g in self.groups)
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "flushes": self.flushes,
+            "groups": len(self.groups),
+            "mean_cd": round(self.mean_cd(), 3),
+            "modes": self.mode_counts(),
+            "plan_cache_hit_rate": round(self.cache_hit_rate(), 4),
+            "prewarmed_plans": self.prewarmed_plans,
+            "cp_overhead_paid_us": round(self.cp_overhead_paid_s * 1e6, 2),
+            "cp_overhead_saved_us": round(self.cp_overhead_saved_s * 1e6, 2),
+            "modeled_busy_time_us": round(self.modeled_busy_time_s() * 1e6, 2),
+            "queue_depths": self.queue_depth_histogram(),
+        }
+
+
+def _bucket(depth: int) -> str:
+    if depth <= 0:
+        return "0"
+    lo = 1
+    while lo * 2 <= depth:
+        lo *= 2
+    return str(lo) if lo == 1 else f"{lo}-{2 * lo - 1}"
+
+
+def _bucket_lo(name: str) -> int:
+    return int(name.split("-")[0])

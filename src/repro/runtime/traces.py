@@ -1,0 +1,65 @@
+"""Arrival traces for closed-loop serving replay — DESIGN.md §10.4.
+
+Two canonical shapes the serving benchmark replays:
+
+- **Poisson**: steady-state open-loop traffic (exponential inter-arrivals),
+  the paper's "heavy steady load" regime where the plan cache should reach
+  ~100% hit rate.
+- **Bursty**: on/off modulated Poisson — arrivals at ``burst_factor`` × the
+  base rate during a duty window, silence elsewhere.  This is the "varying
+  available parallelism" regime the dynamic logic exists for: queue depth
+  (and hence CD_exec) swings between bursts and troughs.
+
+All generators take an explicit seed and return sorted arrival times in
+seconds, so replays are deterministic.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+
+def poisson_trace(
+    rate_hz: float, duration_s: float, seed: int = 0
+) -> List[float]:
+    """Arrival times of a Poisson process with mean rate ``rate_hz``."""
+    if rate_hz <= 0:
+        raise ValueError(f"rate_hz must be > 0, got {rate_hz}")
+    rng = np.random.default_rng(seed)
+    t, out = 0.0, []
+    while True:
+        t += float(rng.exponential(1.0 / rate_hz))
+        if t >= duration_s:
+            return out
+        out.append(t)
+
+
+def bursty_trace(
+    rate_hz: float,
+    duration_s: float,
+    period_s: float = 0.25,
+    duty: float = 0.3,
+    seed: int = 0,
+) -> List[float]:
+    """On/off Poisson: arrivals only inside the first ``duty`` fraction of
+    each ``period_s`` window, at ``rate_hz / duty`` while on — so the mean
+    rate is exactly ``rate_hz`` and traces are load-comparable with
+    `poisson_trace`, with a peak-to-mean ratio of ``1 / duty``."""
+    if rate_hz <= 0 or not 0 < duty <= 1:
+        raise ValueError(f"need rate_hz > 0 and 0 < duty <= 1, got "
+                         f"rate_hz={rate_hz} duty={duty}")
+    burst_rate = rate_hz / duty
+    rng = np.random.default_rng(seed)
+    t, out = 0.0, []
+    while t < duration_s:
+        t += float(rng.exponential(1.0 / burst_rate))
+        if (t % period_s) / period_s <= duty and t < duration_s:
+            out.append(t)
+    return out
+
+
+def uniform_trace(rate_hz: float, duration_s: float) -> List[float]:
+    """Evenly spaced arrivals (deterministic lockstep baseline)."""
+    n = int(rate_hz * duration_s)
+    return [i / rate_hz for i in range(1, n + 1)]

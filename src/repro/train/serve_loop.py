@@ -3,10 +3,16 @@
 ``make_serve_fns`` returns jit-able (prefill, decode_step); the launcher
 shards the cache over the mesh (heads/latent over 'model', batch over
 'data').  ``decode_tokens`` drives a simple greedy loop for the examples.
+
+When a `repro.runtime.Runtime` is passed, every decode step also routes
+its QKV/FFN GEMM descriptors through the online runtime (shadow dispatch,
+DESIGN.md §10.5): the dynamic logic plans and meters the step's GEMM
+bundle (§6.11 fuse-vs-group included) while the jitted model does the
+math.  Telemetry then reports CD/mode/plan-cache behaviour for the run.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,9 +32,14 @@ def make_serve_fns(model: Model) -> Tuple[Callable, Callable]:
 
 def greedy_decode(
     model: Model, params, prompt_batch, *, s_max: int, steps: int,
-    cache_dtype=jnp.float32,
+    cache_dtype=jnp.float32, runtime: Optional[Any] = None,
+    tenant: str = "default",
 ):
-    """Greedy generation for examples/tests (host loop, jitted steps)."""
+    """Greedy generation for examples/tests (host loop, jitted steps).
+
+    ``runtime``: optional `repro.runtime.Runtime`; each decode step's
+    QKV/FFN GEMM descriptors are submitted to it and flushed, so the
+    online dynamic logic runs against the live decode load."""
     B = jax.tree.leaves(prompt_batch)[0].shape[0]
     cache = model.init_cache(batch=B, s_max=s_max, dtype=cache_dtype)
     prefill = jax.jit(model.prefill)
@@ -37,8 +48,20 @@ def greedy_decode(
     cache_len = jnp.asarray(length, jnp.int32)
     out = []
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    step_requests = None
+    if runtime is not None:
+        from repro.runtime import decode_step_requests, prewarm_decode
+        prewarm_decode(runtime, model.cfg, batches=[B])
+        # the bundle (incl. the §6.11 fusion decision) is identical every
+        # step — derive it once, submit it per step
+        step_requests = decode_step_requests(runtime.ctrl, model.cfg, B)
     for _ in range(steps):
         out.append(tok)
+        if step_requests is not None:
+            for req in step_requests:
+                runtime.submit(req, tenant=tenant)
         logits, cache, cache_len = decode(params, tok, cache, cache_len)
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        if runtime is not None:
+            runtime.flush(force=True)
     return jnp.concatenate(out, axis=1)

@@ -1,0 +1,33 @@
+"""Optional-`hypothesis` shim for property-based tests.
+
+`hypothesis` is declared in requirements.txt, but minimal environments
+(e.g. the CPU container the seed ran in) may not have it.  Importing
+``given``/``settings``/``st`` from here instead of from `hypothesis`
+keeps those environments collecting and running the whole suite: when
+hypothesis is missing, every ``@given`` test is skipped individually and
+the plain tests in the same module still run.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only in minimal envs
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        """Evaluates strategy expressions (st.lists(st.integers()), …) to
+        inert placeholders so module-level decorators still construct."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()

@@ -1,8 +1,7 @@
 """Cost-model invariants (incl. hypothesis property tests)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st  # skips if hypothesis missing
 
 from repro.core import (
     DEFAULT_SPEC,

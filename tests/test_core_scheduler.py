@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import (
     ConcurrencyController,
@@ -94,3 +95,103 @@ def test_predictor_driven_plan_limits_bad_concurrency():
     descs = [GemmDesc(4096, 4096, 20480)] * 16
     sched = ctrl.plan(descs)
     assert max(g.cd for g in sched.groups) <= 8
+
+
+def test_plan_group_incremental_matches_plan():
+    """plan() must be exactly a loop over plan_group() — the runtime relies
+    on the incremental entry point producing the same schedule."""
+    ctrl = _controller()
+    descs = (
+        [GemmDesc(512, 512, 512)] * 5
+        + [GemmDesc(1024, 512, 512)] * 2
+        + [GemmDesc(128, 128, 2048)] * 3
+    )
+    sched = ctrl.plan(descs)
+    pending = list(range(len(descs)))
+    groups = []
+    while pending:
+        gp, pending = ctrl.plan_group(descs, pending)
+        groups.append(gp)
+    assert [(g.indices, g.cd, g.mode) for g in groups] == \
+        [(g.indices, g.cd, g.mode) for g in sched.groups]
+
+
+def test_plan_available_caps_cd():
+    """§4.4: CD_exec = min(CD_predicted, available) — the runtime passes its
+    live slot count through `available`."""
+    ctrl = _controller()
+    descs = [GemmDesc(256, 256, 256)] * 8
+    unconstrained = ctrl.plan(descs)
+    assert max(g.cd for g in unconstrained.groups) > 2
+    constrained = ctrl.plan(descs, available=2)
+    assert all(g.cd <= 2 for g in constrained.groups)
+    seen = sorted(i for g in constrained.groups for i in g.indices)
+    assert seen == list(range(len(descs)))
+
+
+def test_heterogeneous_split_when_members_disagree():
+    """§6.7: compatible GEMMs whose preferred CDs disagree are split into
+    homogeneous sub-groups instead of executing fully-concurrently."""
+    ctrl = _controller()
+    small = GemmDesc(128, 512, 4096)    # prefers high CD (memory-bound)
+    big = GemmDesc(8192, 512, 4096)     # prefers CD=1 (contention)
+    assert ctrl.lib.get(small).preferred_cd() >= 4
+    assert ctrl.lib.get(big).preferred_cd() == 1
+    sched = ctrl.plan([small] * 4 + [big] * 2)
+    for g in sched.groups:
+        keys = {([small] * 4 + [big] * 2)[i].key() for i in g.indices}
+        assert len(keys) == 1           # every group ended up homogeneous
+        assert g.mode in ("grouped", "single")
+    big_groups = [g for g in sched.groups if 4 in g.indices or 5 in g.indices]
+    assert all(g.cd == 1 for g in big_groups)
+
+
+def test_heterogeneous_ragged_when_members_agree():
+    """§6.7 contrast case: mixed-M members that all prefer the pooled CD do
+    execute fully-concurrently as one ragged launch."""
+    ctrl = _controller()
+    descs = [GemmDesc(64, 512, 512), GemmDesc(128, 512, 512),
+             GemmDesc(256, 512, 512), GemmDesc(512, 512, 512)]
+    for d in descs:
+        assert ctrl.lib.get(d).preferred_cd() >= 4
+    sched = ctrl.plan(descs)
+    assert len(sched.groups) == 1
+    assert sched.groups[0].mode == "ragged" and sched.groups[0].cd == 4
+
+
+def test_fusion_policy_prefers_fuse_for_decode_qkv():
+    """§6.11: skinny decode-step QKV (shared A, same K) — the fused wide
+    GEMM reads the activation once and saves launches, so it must win."""
+    ctrl = _controller()
+    qkv = [GemmDesc(8, 2560, 2560)] * 3
+    choice, t_fused, t_group = ctrl.plan_shared_input(qkv)
+    assert choice == "fuse"
+    assert t_fused <= t_group
+
+
+def test_fusion_policy_consistent_with_reported_times():
+    ctrl = _controller()
+    for descs in (
+        [GemmDesc(8, 2560, 2560)] * 3,
+        [GemmDesc(4096, 1024, 1024)] * 3,
+        [GemmDesc(512, 512, 4096)] * 2,
+    ):
+        choice, t_fused, t_group = ctrl.plan_shared_input(descs)
+        assert choice == ("fuse" if t_fused <= t_group else "group")
+        # grouped alternative is exactly the §4.4 plan of the bundle
+        assert t_group == pytest.approx(ctrl.plan(descs).modeled_time_s)
+
+
+def test_go_tiles_flag_falls_back_to_isolated_tiles():
+    """Baseline controllers (go_tiles=False) must group with the
+    isolated-tuned tile — the paper's 'default' concurrent baseline."""
+    lib = GOLibrary()
+    d = GemmDesc(2048, 512, 20480)               # GO tile differs @CD4
+    entry = lib.get(d)
+    assert entry.go[4] != entry.isolated
+    base = ConcurrencyController(library=lib, go_tiles=False)
+    grouped = [g for g in base.plan([d] * 4).groups if g.cd > 1]
+    assert grouped and all(g.tile == entry.isolated for g in grouped)
+    gold = ConcurrencyController(library=lib)
+    go_grouped = [g for g in gold.plan([d] * 4).groups if g.cd > 1]
+    assert go_grouped and all(g.tile == entry.go[g.cd] for g in go_grouped)
