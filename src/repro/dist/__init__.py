@@ -1,0 +1,35 @@
+"""Distribution substrate — DESIGN.md §12.
+
+Four orthogonal pieces, all CPU-debuggable (debug meshes over forced host
+devices) and all consumed by the launchers:
+
+- ``sharding``        logical-axis rules → `PartitionSpec`s (TP + ZeRO-1)
+- ``compress``        error-feedback gradient compression (int8 EF)
+- ``checkpoint``      atomic sharded-state save/restore with retention
+- ``fault_tolerance`` checkpointing driver: NaN rollback, signal save,
+                      restart-resume
+- ``resources``       mesh → per-shard resource fraction: derates the
+                      concurrency runtime's `available` slot budget so
+                      CD prediction sees post-sharding capacity
+"""
+from repro.dist import checkpoint, compress, fault_tolerance, sharding
+from repro.dist.compress import compress_grads, ef_init
+from repro.dist.fault_tolerance import FaultTolerantDriver, FTConfig
+from repro.dist.resources import MeshResources, mesh_resources
+from repro.dist.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    named,
+    params_pspecs,
+    pspec_for_spec,
+    zero1_pspecs,
+)
+
+__all__ = [
+    "checkpoint", "compress", "fault_tolerance", "sharding",
+    "compress_grads", "ef_init",
+    "FaultTolerantDriver", "FTConfig",
+    "MeshResources", "mesh_resources",
+    "batch_pspecs", "cache_pspecs", "named", "params_pspecs",
+    "pspec_for_spec", "zero1_pspecs",
+]

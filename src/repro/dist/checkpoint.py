@@ -1,0 +1,127 @@
+"""Atomic train-state checkpointing — DESIGN.md §12.4.
+
+Layout: one directory per step under the checkpoint root —
+
+    <dir>/step_00000042/arrays.npz     # leaves, flattened in tree order
+    <dir>/step_00000042/meta.json      # step + leaf count
+
+Writes go to a ``.tmp-*`` sibling and are published with one
+``os.replace`` so a crash mid-write never leaves a readable-looking
+partial checkpoint; ``restore`` unflattens into the *caller's* tree (the
+treedef and any shardings come from the ``like`` argument, so restored
+leaves land back on the mesh they came from).  ``keep`` prunes old steps
+after every successful save.  ``save_async`` snapshots device arrays to
+host first, then writes on a daemon thread — safe with donated buffers.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+STEP_PREFIX = "step_"
+
+
+def _step_dir(path: Path, step: int) -> Path:
+    return path / f"{STEP_PREFIX}{step:08d}"
+
+
+def _to_host(state: Any) -> Any:
+    return jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+
+
+def save(path, state: Any, step: int, keep: Optional[int] = None) -> Path:
+    """Write ``state`` atomically as ``step``; prune to ``keep`` newest."""
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    final = _step_dir(path, step)
+    tmp = path / f".tmp-{final.name}-{os.getpid()}-{threading.get_ident()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    try:
+        leaves = jax.tree.leaves(_to_host(state))
+        np.savez(tmp / "arrays.npz",
+                 **{f"leaf_{i}": a for i, a in enumerate(leaves)})
+        (tmp / "meta.json").write_text(
+            json.dumps({"step": step, "n_leaves": len(leaves)})
+        )
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    if keep is not None:
+        for old in all_steps(path)[:-keep]:
+            shutil.rmtree(_step_dir(path, old), ignore_errors=True)
+    return final
+
+
+def save_async(path, state: Any, step: int,
+               keep: Optional[int] = None) -> threading.Thread:
+    """Snapshot to host NOW, write in the background; join() to block."""
+    host = _to_host(state)
+    t = threading.Thread(
+        target=save, args=(path, host, step), kwargs={"keep": keep},
+        daemon=True, name=f"ckpt-save-{step}",
+    )
+    t.start()
+    return t
+
+
+def all_steps(path) -> list:
+    path = Path(path)
+    if not path.is_dir():
+        return []
+    steps = []
+    for p in path.iterdir():
+        if p.is_dir() and p.name.startswith(STEP_PREFIX):
+            try:
+                steps.append(int(p.name[len(STEP_PREFIX):]))
+            except ValueError:
+                continue
+    return sorted(steps)
+
+
+def latest_step(path) -> Optional[int]:
+    steps = all_steps(path)
+    return steps[-1] if steps else None
+
+
+def restore(path, like: Any, step: Optional[int] = None) -> Tuple[Any, int]:
+    """Load ``step`` (default latest) into the structure of ``like``.
+
+    Each leaf is device_put back onto ``like``'s sharding when it has one,
+    so a restored TrainState lands sharded exactly as before the crash.
+    """
+    path = Path(path)
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+    d = _step_dir(path, step)
+    meta = json.loads((d / "meta.json").read_text())
+    like_leaves, treedef = jax.tree.flatten(like)
+    if meta["n_leaves"] != len(like_leaves):
+        raise ValueError(
+            f"checkpoint {d.name} has {meta['n_leaves']} leaves, "
+            f"restore target has {len(like_leaves)}"
+        )
+    with np.load(d / "arrays.npz") as z:
+        loaded = [z[f"leaf_{i}"] for i in range(meta["n_leaves"])]
+
+    def place(arr: np.ndarray, ref):
+        sharding = getattr(ref, "sharding", None)
+        if isinstance(ref, jax.Array) and sharding is not None:
+            return jax.device_put(arr, sharding)
+        return jax.numpy.asarray(arr)
+
+    leaves = [place(a, r) for a, r in zip(loaded, like_leaves)]
+    return jax.tree.unflatten(treedef, leaves), int(meta["step"])

@@ -1,0 +1,169 @@
+"""Fault-tolerant training driver — DESIGN.md §12.4.
+
+Wraps any ``step_fn(state, batch) -> (state, metrics)`` with the three
+recovery paths a long pod run needs:
+
+- **periodic checkpoints** every ``ckpt_every`` completed steps (atomic,
+  retained to ``keep``; async off the critical path when ``async_ckpt``);
+- **NaN/Inf rollback**: a non-finite loss discards the poisoned update,
+  restores the last checkpoint (or the initial-state snapshot) and keeps
+  consuming the batch stream — the bad batch is never replayed;
+- **checkpoint-on-signal**: SIGTERM/SIGINT set a stop flag; the loop
+  saves at the current step and returns cleanly (preemption-safe);
+- **restart-resume**: ``maybe_restore()`` reloads the latest checkpoint,
+  and ``run(..., start_step=...)`` fast-forwards the (step, batch) stream
+  past already-completed steps.  Batches are keyed by step id and the
+  data pipeline is deterministic in it, so a killed-and-resumed run
+  reproduces the uninterrupted run bit for bit.
+
+The driver is jit-donation-safe: rollback never reads ``self.state``
+after it was passed to a donating step — it restores from the checkpoint
+store or the host-side initial snapshot taken at construction.
+"""
+from __future__ import annotations
+
+import math
+import signal
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Iterable, Optional
+
+import jax
+import numpy as np
+
+from repro.dist import checkpoint as ckpt
+
+
+@dataclass
+class FTConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 3
+    nan_rollback: bool = True
+    async_ckpt: bool = False
+    handle_signals: bool = True      # checkpoint-on-SIGTERM/SIGINT
+    # called as step_hook(completed_step, state) after every completed
+    # step — tests use it to simulate preemption mid-run.
+    step_hook: Optional[Callable[[int, Any], None]] = None
+    loss_key: str = "loss"
+
+
+class FaultTolerantDriver:
+    def __init__(self, step_fn: Callable, state: Any, cfg: FTConfig):
+        self.step_fn = step_fn
+        self.state = state
+        self.cfg = cfg
+        # Host snapshot for pre-first-checkpoint rollback (donation-safe).
+        self._init_host = jax.tree.map(
+            lambda x: np.asarray(jax.device_get(x)), state
+        )
+        self._stop = threading.Event()
+        self._pending_save: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------ control
+    def request_stop(self) -> None:
+        """Ask the loop to checkpoint at the current step and return."""
+        self._stop.set()
+
+    def maybe_restore(self) -> int:
+        """Load the latest checkpoint into ``state``; return its step (0
+        when none exists)."""
+        step = ckpt.latest_step(self.cfg.ckpt_dir)
+        if step is None:
+            return 0
+        self.state, step = ckpt.restore(self.cfg.ckpt_dir, self.state,
+                                        step=step)
+        return step
+
+    # ------------------------------------------------------------- saving
+    def _save(self, step: int) -> None:
+        if self._pending_save is not None:
+            self._pending_save.join()
+            self._pending_save = None
+        if self.cfg.async_ckpt:
+            self._pending_save = ckpt.save_async(
+                self.cfg.ckpt_dir, self.state, step, keep=self.cfg.keep
+            )
+        else:
+            ckpt.save(self.cfg.ckpt_dir, self.state, step,
+                      keep=self.cfg.keep)
+
+    def _rollback(self) -> int:
+        """Restore the newest checkpoint (or the initial snapshot).
+        Returns the step the state was rolled back to."""
+        if self._pending_save is not None:
+            self._pending_save.join()
+            self._pending_save = None
+        step = ckpt.latest_step(self.cfg.ckpt_dir)
+        if step is not None:
+            self.state, step = ckpt.restore(self.cfg.ckpt_dir, self.state,
+                                            step=step)
+            return step
+        self.state = jax.tree.map(jax.numpy.asarray, self._init_host)
+        return 0
+
+    # ---------------------------------------------------------------- run
+    def run(
+        self,
+        batches: Iterable,
+        total_steps: int,
+        start_step: int = 0,
+    ) -> dict:
+        """Consume ``(step_id, batch)`` pairs until ``total_steps`` steps
+        have completed; returns losses / rollbacks / final_step / p95_s."""
+        cfg = self.cfg
+        completed = start_step
+        losses: list = []
+        times: list = []
+        rollbacks = 0
+        stopped = False
+
+        prev_handlers = {}
+        if cfg.handle_signals and threading.current_thread() is threading.main_thread():
+            def _on_signal(signum, frame):  # noqa: ARG001
+                self._stop.set()
+            for s in (signal.SIGTERM, signal.SIGINT):
+                try:
+                    prev_handlers[s] = signal.signal(s, _on_signal)
+                except (ValueError, OSError):  # non-main thread / platform
+                    pass
+        try:
+            for step_id, batch in batches:
+                if completed >= total_steps:
+                    break
+                if self._stop.is_set():
+                    stopped = True
+                    self._save(completed)
+                    break
+                if step_id < completed:
+                    continue  # fast-forward a restarted stream
+                t0 = time.perf_counter()
+                new_state, metrics = self.step_fn(self.state, batch)
+                loss = float(metrics[cfg.loss_key])
+                times.append(time.perf_counter() - t0)
+                if cfg.nan_rollback and not math.isfinite(loss):
+                    rollbacks += 1
+                    completed = self._rollback()
+                    continue  # the poisoned batch is consumed, not retried
+                self.state = new_state
+                completed += 1
+                losses.append(loss)
+                if cfg.ckpt_every and completed % cfg.ckpt_every == 0:
+                    self._save(completed)
+                if cfg.step_hook is not None:
+                    cfg.step_hook(completed, self.state)
+        finally:
+            if self._pending_save is not None:
+                self._pending_save.join()
+                self._pending_save = None
+            for s, h in prev_handlers.items():
+                signal.signal(s, h)
+
+        return {
+            "losses": losses,
+            "rollbacks": rollbacks,
+            "final_step": completed,
+            "stopped": stopped,
+            "p95_s": float(np.percentile(times, 95)) if times else 0.0,
+        }

@@ -1,0 +1,55 @@
+"""Mesh → available-resources mapping — DESIGN.md §12.5.
+
+GOLDYLOC's dynamic logic sizes CD_exec from the *globally available*
+resources (paper §4.4).  Under tensor parallelism those resources shrink:
+every chip co-hosts one shard of each of the ``model``-axis GEMMs, so the
+VMEM and bandwidth a concurrent-GEMM group can claim — and the number of
+concurrency slots worth filling — is the chip budget divided by the
+model-parallel degree (collective traffic for the shards occupies the
+rest).  This module computes that derating once from the active mesh:
+
+- ``spec``        — the chip `TPUSpec` through `TPUSpec.scaled(frac)`
+                    (the paper's GPU/2, GPU/4 resource-constrained path);
+- ``slot_budget`` — ``max(1, max_cd // model_shards)``, the cap the
+                    runtime passes as ``available`` so CD prediction sees
+                    post-sharding capacity.
+
+Pure arithmetic over ``mesh.axis_names`` / ``mesh.shape``; duck-typed
+meshes work (tests), and data-parallel axes do NOT derate — DP replicas
+run on disjoint chips.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.core.cost_model import DEFAULT_SPEC, TPUSpec
+
+
+@dataclass(frozen=True)
+class MeshResources:
+    mesh_shape: Dict[str, int]
+    model_shards: int      # co-resident model-parallel degree per chip
+    frac: float            # per-shard resource fraction (1 / model_shards)
+    spec: TPUSpec          # chip spec scaled to the per-shard fraction
+    slot_budget: int       # derated concurrency slots (available cap)
+
+
+def shard_fraction(mesh) -> float:
+    """Per-shard fraction of one chip's contendable resources."""
+    model = int(mesh.shape.get("model", 1)) if "model" in mesh.axis_names else 1
+    return 1.0 / max(model, 1)
+
+
+def mesh_resources(
+    mesh, spec: TPUSpec = DEFAULT_SPEC, max_cd: int = 16
+) -> MeshResources:
+    frac = shard_fraction(mesh)
+    model = round(1.0 / frac)
+    return MeshResources(
+        mesh_shape=dict(mesh.shape),
+        model_shards=model,
+        frac=frac,
+        spec=spec.scaled(frac),
+        slot_budget=max(1, max_cd // model),
+    )

@@ -1,0 +1,152 @@
+"""Logical-axis sharding rules → `PartitionSpec`s — DESIGN.md §12.1.
+
+Every parameter declares *logical* axis names in its `models.spec.Spec`
+(``embed``, ``mlp``, ``heads`` …).  This module is the single place those
+names meet a concrete mesh: ``LOGICAL_RULES`` maps logical → mesh axis,
+``pspec_for_spec`` applies the map with a divisibility fallback (a dim
+that doesn't divide the mesh axis is replicated, never errors), and
+``zero1_pspecs`` layers the ZeRO-1 optimizer-state sharding on top by
+assigning the data-parallel axes to the first still-replicated divisible
+dim of every leaf (DESIGN.md §12.2).
+
+All functions only touch ``mesh.axis_names`` / ``mesh.shape`` so they work
+with duck-typed meshes in tests; only ``named`` (PartitionSpec →
+NamedSharding) needs a real `jax.sharding.Mesh`.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.spec import Spec, is_spec_tree
+
+# logical axis → mesh axis (None = always replicated).  Tensor-parallel
+# ("model") shards the per-layer contraction-free dims: MLP hidden, Q/KV
+# heads, experts, vocab.  "embed" stays replicated so the residual stream
+# never needs re-gathering inside a layer.
+LOGICAL_RULES: Dict[str, Optional[str]] = {
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "experts": "model",
+    "vocab": "model",
+    "embed": None,
+    "layers": None,   # lax.scan stack axis — never sharded
+    "data": None,     # reserved for ZeRO-1 / batch, applied separately
+}
+
+# DP axes in outer-to-inner order; "pod" only exists on multi-pod meshes.
+DP_AXES: Tuple[str, ...] = ("pod", "data")
+
+
+def _axis_size(mesh, name: str) -> int:
+    return int(mesh.shape.get(name, 1)) if name in mesh.axis_names else 0
+
+
+def _is_leaf_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def _is_leaf_p(x) -> bool:
+    return isinstance(x, P)
+
+
+def pspec_for_spec(spec: Spec, mesh, rules: Optional[Dict] = None) -> P:
+    """PartitionSpec for one parameter Spec on ``mesh``.
+
+    A dim maps to its logical rule's mesh axis iff the axis exists, has
+    size > 1, divides the dim, and was not already used by an earlier dim
+    of the same param (a mesh axis may appear at most once per spec).
+    Anything else falls back to replication.
+    """
+    rules = LOGICAL_RULES if rules is None else rules
+    entries = []
+    used = set()
+    for dim, logical in zip(spec.shape, spec.axes):
+        axis = rules.get(logical) if logical is not None else None
+        size = _axis_size(mesh, axis) if axis else 0
+        if axis and axis not in used and size > 1 and dim % size == 0:
+            entries.append(axis)
+            used.add(axis)
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def params_pspecs(model, mesh) -> Any:
+    """Tree of PartitionSpecs mirroring ``model.init(...)`` (TP only)."""
+    return jax.tree.map(
+        lambda s: pspec_for_spec(s, mesh), model.specs(),
+        is_leaf=_is_leaf_spec,
+    )
+
+
+def _dp_axes_for(dim: int, mesh) -> Tuple[str, ...]:
+    """Largest suffix of the present DP axes whose product divides dim."""
+    dp = tuple(a for a in DP_AXES if _axis_size(mesh, a) > 1)
+    while dp and dim % math.prod(_axis_size(mesh, a) for a in dp) != 0:
+        dp = dp[1:]  # drop the outermost (pod) first
+    return dp
+
+
+def _with_zero1(spec: Spec, pspec: P, mesh) -> P:
+    """Add the DP axes to the first replicated divisible dim (ZeRO-1)."""
+    entries = list(pspec)
+    for i, dim in enumerate(spec.shape):
+        if entries[i] is not None:
+            continue
+        dp = _dp_axes_for(dim, mesh)
+        if dp:
+            entries[i] = dp[0] if len(dp) == 1 else dp
+            return P(*entries)
+    return pspec
+
+
+def zero1_pspecs(model, mesh) -> Any:
+    """ZeRO-1 specs: TP sharding + DP axes over each leaf's first free dim.
+
+    Used for the f32 master params and AdamW moments: the optimizer state
+    lives data-sharded, the forward all-gathers only the bf16 cast
+    (DESIGN.md §12.2).  Every mesh axis still appears at most once per
+    leaf; leaves with no divisible free dim stay TP-only.
+    """
+    leaves, treedef = jax.tree.flatten(model.specs(), is_leaf=_is_leaf_spec)
+    return jax.tree.unflatten(
+        treedef,
+        [_with_zero1(s, pspec_for_spec(s, mesh), mesh) for s in leaves],
+    )
+
+
+def batch_pspecs(batch: Any, mesh) -> Any:
+    """Shard every input leaf's leading (batch) dim over the DP axes.
+
+    Leaves may be arrays or `ShapeDtypeStruct`s (the dry-run lowers from
+    specs).  Non-divisible batch dims fall back to replication.
+    """
+
+    def one(x) -> P:
+        shape = getattr(x, "shape", ())
+        if not shape:
+            return P()
+        dp = _dp_axes_for(shape[0], mesh)
+        lead = dp[0] if len(dp) == 1 else (dp if dp else None)
+        return P(lead, *([None] * (len(shape) - 1)))
+
+    return jax.tree.map(one, batch)
+
+
+def cache_pspecs(cache: Any, mesh, model) -> Any:
+    """Decode-cache PartitionSpecs (delegates to the model's per-family
+    layout: batch over DP, heads/channels over 'model')."""
+    return model.cache_pspecs(mesh, cache)
+
+
+def named(mesh, tree: Any) -> Any:
+    """PartitionSpec tree → NamedSharding tree for jit/device_put."""
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p), tree, is_leaf=_is_leaf_p
+    )

@@ -1,11 +1,17 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=512"
+    ).strip()
 
 # ^ MUST precede every other import: jax locks the device count on first init.
-# The dry-run (and ONLY the dry-run) fakes 512 host devices so the production
-# meshes can be built and every (arch × shape × mesh) cell can be
-# lower()+compile()d — proving shardings, collectives, and memory are
-# coherent without TPU hardware.
+# The dry-run fakes 512 host devices so the production meshes can be built
+# and every (arch × shape × mesh) cell can be lower()+compile()d — proving
+# shardings, collectives, and memory are coherent without TPU hardware.
+# Unrelated pre-set XLA_FLAGS are preserved; an explicit
+# ...device_count=N (e.g. =4 for a `--debug-mesh 4x1 --reduced` CI run)
+# wins over the 512 fake.
 
 import argparse          # noqa: E402
 import json              # noqa: E402
@@ -27,7 +33,8 @@ from repro.dist.sharding import (                          # noqa: E402
     params_pspecs,
     zero1_pspecs,
 )
-from repro.launch.mesh import make_production_mesh         # noqa: E402
+from repro.dist.resources import mesh_resources            # noqa: E402
+from repro.launch.mesh import make_debug_mesh, make_production_mesh  # noqa: E402
 from repro.models import build_model                       # noqa: E402
 from repro.optim import AdamW, AdamWConfig                 # noqa: E402
 from repro.train.train_loop import TrainState, make_train_step  # noqa: E402
@@ -94,9 +101,10 @@ def dot_flops_bytes(hlo_text: str) -> dict:
         "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8,
     }
     inst = re.compile(r"^\s*(%[\w.\-]+) = (\w+)\[([\d,]*)\]")
+    # operands may carry type prefixes: dot(f32[4,32]{1,0} %a, ... %b)
     dot = re.compile(
-        r"= (\w+)\[([\d,]*)\](?:\{[^}]*\})? dot\((%[\w.\-]+), "
-        r"(%[\w.\-]+)\).*?lhs_contracting_dims=\{([\d,]*)\}"
+        r"= (\w+)\[([\d,]*)\](?:\{[^}]*\})? dot\([^%)]*(%[\w.\-]+),\s*"
+        r"[^%)]*(%[\w.\-]+)\).*?lhs_contracting_dims=\{([\d,]*)\}"
     )
 
     def dims(s_):
@@ -165,14 +173,22 @@ def _with_depth(cfg, depth):
 
 
 def lower_cell(arch: str, shape_name: str, multi_pod: bool,
-               depth: int | None = None) -> dict:
-    cfg = _with_depth(get_arch(arch), depth)
+               depth: int | None = None,
+               debug_mesh: tuple[int, int] | None = None,
+               reduced: bool = False) -> dict:
+    cfg = get_arch(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    cfg = _with_depth(cfg, depth)
     shape = get_shape(shape_name)
-    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if debug_mesh:
+        mesh_name = f"debug{debug_mesh[0]}x{debug_mesh[1]}"
+    else:
+        mesh_name = "2x16x16" if multi_pod else "16x16"
     rec = {
         "arch": arch, "shape": shape_name, "mesh": mesh_name,
         "kind": shape.kind, "status": "ok", "depth": depth,
-        "n_layers": cfg.n_layers,
+        "n_layers": cfg.n_layers, "reduced": reduced,
     }
     if not cfg.supports_shape(shape_name):
         rec["status"] = "skipped"
@@ -182,7 +198,13 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         )
         return rec
 
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh = (
+        make_debug_mesh(*debug_mesh) if debug_mesh
+        else make_production_mesh(multi_pod=multi_pod)
+    )
+    res = mesh_resources(mesh)
+    rec["shard_frac"] = res.frac
+    rec["cd_slot_budget"] = res.slot_budget
     # remat only pays off in training; serve steps lower without it
     model = build_model(
         cfg, mesh=mesh, remat="full" if shape.kind == "train" else "none"
@@ -202,12 +224,16 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         rec["compile_s"] = round(time.time() - t1, 1)
 
         mem = compiled.memory_analysis()
+        if isinstance(mem, (list, tuple)):  # per-device on some jax versions
+            mem = mem[0] if mem else None
         for f in ("argument_size_in_bytes", "output_size_in_bytes",
                   "temp_size_in_bytes", "generated_code_size_in_bytes"):
             v = getattr(mem, f, None)
             if v is not None:
                 rec[f] = int(v)
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else None
         if cost:
             rec["flops"] = float(cost.get("flops", -1))
             rec["hlo_bytes"] = float(
@@ -309,7 +335,17 @@ def main():
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--depth", type=int, default=None,
                     help="scanned-stack depth override (roofline probes)")
+    ap.add_argument("--debug-mesh", default=None, metavar="DxM",
+                    help="small debug mesh (e.g. 4x1) over the forced host "
+                         "devices instead of the production pod — pair with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=4")
+    ap.add_argument("--reduced", action="store_true",
+                    help="lower the reduced (smoke) config of each arch")
     args = ap.parse_args()
+
+    debug_mesh = None
+    if args.debug_mesh:
+        debug_mesh = tuple(int(x) for x in args.debug_mesh.lower().split("x"))
 
     archs = list_archs() if args.arch in (None, "all") else [args.arch]
     shapes = list(SHAPES) if args.shape in (None, "all") else [args.shape]
@@ -319,15 +355,22 @@ def main():
     for arch in archs:
         for shape in shapes:
             for mp in meshes:
-                mesh_name = "2x16x16" if mp else "16x16"
+                if debug_mesh:
+                    mesh_name = f"debug{debug_mesh[0]}x{debug_mesh[1]}"
+                else:
+                    mesh_name = "2x16x16" if mp else "16x16"
                 suffix = f"__L{args.depth}" if args.depth else ""
+                if args.reduced:
+                    suffix += "__reduced"
                 out = RESULTS_DIR / f"{arch}__{shape}__{mesh_name}{suffix}.json"
                 if out.exists() and not args.force:
                     print(f"[skip] {out.name} exists")
                     continue
                 print(f"[dryrun] {arch} × {shape} × {mesh_name}", flush=True)
                 try:
-                    rec = lower_cell(arch, shape, mp, depth=args.depth)
+                    rec = lower_cell(arch, shape, mp, depth=args.depth,
+                                     debug_mesh=debug_mesh,
+                                     reduced=args.reduced)
                 except Exception as e:  # noqa: BLE001
                     rec = {
                         "arch": arch, "shape": shape, "mesh": mesh_name,

@@ -31,9 +31,11 @@ COLLECTIVES = (
 
 _COMP_HDR = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
 _INST = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\w+)\[([\d,]*)\]")
+# Operands may carry type prefixes in compiled-module text:
+#   dot(f32[4,32]{1,0} %lhs, f32[32,32]{1,0} %rhs)
 _DOT = re.compile(
-    r"=\s*(\w+)\[([\d,]*)\](?:\{[^}]*\})?\s*dot\((%[\w.\-]+),\s*"
-    r"(%[\w.\-]+)\).*?lhs_contracting_dims=\{([\d,]*)\}"
+    r"=\s*(\w+)\[([\d,]*)\](?:\{[^}]*\})?\s*dot\([^%)]*(%[\w.\-]+),\s*"
+    r"[^%)]*(%[\w.\-]+)\).*?lhs_contracting_dims=\{([\d,]*)\}"
 )
 _COLL = re.compile(
     r"=\s*(.*?)\s(" + "|".join(COLLECTIVES) + r")(?:-start)?\((.*)$"
@@ -46,6 +48,9 @@ _BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
 _TF = re.compile(r"(?:true_computation|false_computation)=(%?[\w.\-]+)")
 _WHILE = re.compile(r"=\s*[^=]*\bwhile\(.*body=(%?[\w.\-]+)")
 _CONST = re.compile(r"constant\((\d+)\)")
+# XLA annotates canonicalized counted loops with the exact trip count:
+#   backend_config={"known_trip_count":{"n":"7"}}
+_TRIPS = re.compile(r"known_trip_count\D*?(\d+)")
 
 
 def _dims(s: str) -> List[int]:
@@ -68,7 +73,10 @@ class Comp:
     children: List[Tuple[str, str]] = field(default_factory=list)
     # (kind, name): kind ∈ call | while_body | while_cond | branch
     branch_groups: List[List[str]] = field(default_factory=list)
-    while_pairs: List[Tuple[str, str]] = field(default_factory=list)
+    # (body, cond, known_trip_count | None)
+    while_pairs: List[Tuple[str, str, Optional[int]]] = field(
+        default_factory=list
+    )
     max_const: int = 1
 
 
@@ -133,9 +141,11 @@ def parse_hlo(text: str) -> Dict[str, Comp]:
         wm = _WHILE.search(line)
         if wm:
             cond = re.search(r"condition=(%?[\w.\-]+)", line)
+            tm = _TRIPS.search(line)
             cur.while_pairs.append(
                 (wm.group(1).lstrip("%"),
-                 cond.group(1).lstrip("%") if cond else "")
+                 cond.group(1).lstrip("%") if cond else "",
+                 int(tm.group(1)) if tm else None)
             )
         else:
             bm = _BRANCHES.search(line)
@@ -182,8 +192,11 @@ def total_costs(text: str) -> dict:
 
         for kind, child in c.children:
             add(walk(child, depth + 1))
-        for body, cond in c.while_pairs:
-            trips = comps[cond].max_const if cond in comps else 1
+        for body, cond, known in c.while_pairs:
+            if known is not None:
+                trips = known
+            else:
+                trips = comps[cond].max_const if cond in comps else 1
             trips = max(trips, 1)
             add(walk(body, depth + 1), trips)
         for group in c.branch_groups:

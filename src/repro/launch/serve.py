@@ -51,6 +51,11 @@ def main(argv=None):
     if args.runtime:
         from repro.runtime import Runtime
         runtime = Runtime()
+        # Derate available CD slots + cost-model spec to the per-shard
+        # fraction of the serving mesh (DESIGN.md §12.5).
+        res = runtime.set_mesh(mesh)
+        print(f"[serve] runtime derated for mesh={dict(mesh.shape)}: "
+              f"per-shard frac={res.frac:.2f} slot_budget={res.slot_budget}")
 
     t0 = time.time()
     toks = greedy_decode(

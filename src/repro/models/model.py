@@ -184,20 +184,6 @@ class Model:
                 body,
                 policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
             )
-        elif self.remat == "dots":
-            # save matmul outputs: the backward skips recomputing the TP
-            # GEMMs *and their psum all-reduces* (§Perf train iteration)
-            body = jax.checkpoint(
-                body,
-                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
-            )
-        elif self.remat == "dots":
-            # save matmul outputs: the backward skips recomputing the TP
-            # GEMMs *and their psum all-reduces* (§Perf train iteration)
-            body = jax.checkpoint(
-                body,
-                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
-            )
         (x, _), (new_cache, auxs) = jax.lax.scan(
             body, (x, layer_offset), (stack, cache)
         )

@@ -97,6 +97,10 @@ class Runtime:
         self.telemetry = telemetry or Telemetry()
         self.clock = clock
         self.available = self.ctrl.max_cd
+        # unscaled chip state, so set_mesh re-derives and never compounds
+        self._chip_spec = self.ctrl.spec
+        self._chip_lib = self.ctrl.lib
+        self.mesh_resources = None
         self.device_free_t = 0.0
         self._queues: Dict[str, Deque[Ticket]] = {}
         self._rr: int = 0               # round-robin cursor over class order
@@ -130,6 +134,34 @@ class Runtime:
         """Update live available parallelism (other streams/devices taking
         slots).  Part of the plan-cache key, so stale plans never re-bind."""
         self.available = max(1, int(n))
+
+    def set_mesh(self, mesh):
+        """Derate the runtime for a sharded mesh (DESIGN.md §12.5).
+
+        Tensor-parallel shards co-resident on each chip shrink the VMEM /
+        bandwidth a concurrent group can claim: the controller's cost
+        model *and GO library* switch to the per-shard `TPUSpec.scaled`
+        variant (tiles tuned for full-chip VMEM would be wrong under a
+        shard's share), and the ``available`` slot cap drops to the
+        per-shard budget, so CD_exec = min(CD_pred, available) sees
+        post-sharding capacity.  Always derates from the chip spec/lib
+        captured at construction — calling with a new mesh re-derives,
+        never compounds — and a derated mesh gets a fresh private library
+        (the process-global default stays chip-tuned); prewarm after
+        set_mesh, not before."""
+        from repro.core.library import GOLibrary
+        from repro.dist.resources import mesh_resources
+
+        res = mesh_resources(mesh, spec=self._chip_spec,
+                             max_cd=self.ctrl.max_cd)
+        self.ctrl.spec = res.spec
+        self.ctrl.lib = (
+            self._chip_lib if res.frac == 1.0 else GOLibrary(spec=res.spec)
+        )
+        self.set_available(res.slot_budget)
+        self.invalidate_plans()
+        self.mesh_resources = res
+        return res
 
     def queue_depths(self) -> Dict[str, int]:
         return {k: len(q) for k, q in self._queues.items() if q}

@@ -107,6 +107,11 @@ class Telemetry:
             if self.groups else 0.0
         )
 
+    def max_cd(self) -> int:
+        """Highest CD_exec launched — under a sharded mesh this must stay
+        ≤ the derated per-shard slot budget (DESIGN.md §12.5)."""
+        return max((g.cd for g in self.groups), default=0)
+
     def modeled_busy_time_s(self) -> float:
         return sum(g.modeled_time_s for g in self.groups)
 
@@ -117,6 +122,7 @@ class Telemetry:
             "flushes": self.flushes,
             "groups": len(self.groups),
             "mean_cd": round(self.mean_cd(), 3),
+            "max_cd": self.max_cd(),
             "modes": self.mode_counts(),
             "plan_cache_hit_rate": round(self.cache_hit_rate(), 4),
             "prewarmed_plans": self.prewarmed_plans,

@@ -77,14 +77,17 @@ def make_train_step(
                     cparams, b
                 )
                 gacc = jax.tree.map(
-                    lambda a, x: a + x.astype(jnp.float32) / n_microbatches,
-                    gacc, g,
+                    lambda a, x: a + x.astype(jnp.float32), gacc, g
                 )
-                return (gacc, lacc + l / n_microbatches), m
+                return (gacc, lacc + l), m
 
-            (grads, loss), metrics = jax.lax.scan(
+            # Accumulate raw f32 sums and normalize ONCE: per-step division
+            # doubles the rounding ops and drifts vs the single-batch grads.
+            (gsum, lsum), metrics = jax.lax.scan(
                 acc_step, (zeros, jnp.zeros((), jnp.float32)), mb
             )
+            grads = jax.tree.map(lambda x: x / n_microbatches, gsum)
+            loss = lsum / n_microbatches
             metrics = jax.tree.map(lambda m: m[-1], metrics)
 
         if grad_transform is not None:

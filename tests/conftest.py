@@ -1,7 +1,15 @@
 import os
 
-# Tests see the real single-CPU device; ONLY launch/dryrun.py forces 512.
+# Tests run on CPU with 4 forced host devices, so debug meshes (dist
+# sharding / ZeRO-1 / derated-available coverage) exercise real
+# multi-device lowering everywhere, CI included.  A pre-set XLA_FLAGS
+# (e.g. the CI mesh job) wins; ONLY launch/dryrun.py forces 512.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=4"
+    ).strip()
 
 import jax  # noqa: E402
 

@@ -11,10 +11,6 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-# The distribution substrate is not in the tree yet (ROADMAP open item);
-# skip cleanly instead of erroring the whole collection.
-pytest.importorskip("repro.dist", reason="repro.dist not implemented yet")
-
 from repro.configs import get_arch
 from repro.dist import checkpoint as ckpt
 from repro.dist.compress import compress_grads, ef_init

@@ -1,0 +1,119 @@
+"""Fault-tolerance beyond the basics (DESIGN.md §12.4): preemption
+mid-run must resume to a bitwise-identical final state, stop requests
+must checkpoint, and async checkpoints must be crash-consistent."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist import checkpoint as ckpt
+from repro.dist.fault_tolerance import FaultTolerantDriver, FTConfig
+
+
+class Preempted(RuntimeError):
+    pass
+
+
+def _regression(tmp_path, **ft_kw):
+    """Deterministic y = Wx regression; batches keyed by step id only."""
+
+    def train_step(state, batch):
+        w, aux = state
+        x, y = batch
+
+        def loss_fn(w):
+            return jnp.mean((x @ w - y) ** 2)
+
+        l, g = jax.value_and_grad(loss_fn)(w)
+        return (w - 0.1 * g, aux), {"loss": l}
+
+    def batches():
+        s = 0
+        while True:
+            key = jax.random.PRNGKey(s)
+            x = jax.random.normal(key, (8, 4), jnp.float32)
+            y = x @ jnp.ones((4, 2), jnp.float32)
+            yield s, (x, y)
+            s += 1
+
+    state = (jnp.zeros((4, 2)), jnp.zeros(()))
+    cfg = FTConfig(ckpt_dir=str(tmp_path), **ft_kw)
+    return FaultTolerantDriver(train_step, state, cfg), batches
+
+
+def test_kill_and_resume_is_bitwise_identical(tmp_path):
+    total, every, kill_at = 12, 4, 10
+    # Reference: uninterrupted run.
+    ref_driver, ref_batches = _regression(tmp_path / "ref", ckpt_every=every)
+    ref_driver.run(ref_batches(), total)
+    ref_params = np.asarray(jax.device_get(ref_driver.state[0]))
+
+    # Preempted run: the step hook kills the process model at step 10 —
+    # after the periodic checkpoints at 4 and 8 have been written.
+    def bomb(step, _state):
+        if step == kill_at:
+            raise Preempted(f"simulated preemption at {step}")
+
+    d1, b1 = _regression(tmp_path / "ft", ckpt_every=every, step_hook=bomb)
+    with pytest.raises(Preempted):
+        d1.run(b1(), total)
+    assert ckpt.latest_step(tmp_path / "ft") == 8
+
+    # Fresh driver (fresh state, fresh stream): restore + fast-forward.
+    d2, b2 = _regression(tmp_path / "ft", ckpt_every=every)
+    start = d2.maybe_restore()
+    assert start == 8
+    out = d2.run(b2(), total, start_step=start)
+    assert out["final_step"] == total
+    np.testing.assert_array_equal(
+        ref_params, np.asarray(jax.device_get(d2.state[0]))
+    )
+
+
+def test_request_stop_checkpoints_current_step(tmp_path):
+    driver, batches = _regression(tmp_path, ckpt_every=100)
+    stop_at = 7
+
+    def hook(step, _state):
+        if step == stop_at:
+            driver.request_stop()
+
+    driver.cfg.step_hook = hook
+    out = driver.run(batches(), 50)
+    assert out["stopped"] is True
+    assert out["final_step"] == stop_at
+    assert ckpt.latest_step(tmp_path) == stop_at
+    # a fresh driver resumes exactly where the stop landed
+    d2, _ = _regression(tmp_path, ckpt_every=100)
+    assert d2.maybe_restore() == stop_at
+
+
+def test_async_checkpoints_are_complete_and_ordered(tmp_path):
+    driver, batches = _regression(tmp_path, ckpt_every=3, keep=2,
+                                  async_ckpt=True)
+    out = driver.run(batches(), 9)
+    assert out["final_step"] == 9
+    # run() joins pending writers before returning: all published, no tmp
+    assert ckpt.all_steps(tmp_path) == [6, 9]
+    assert not list(tmp_path.glob(".tmp-*"))
+    restored, step = ckpt.restore(tmp_path, driver.state)
+    assert step == 9
+    np.testing.assert_array_equal(
+        np.asarray(driver.state[0]), np.asarray(restored[0])
+    )
+
+
+def test_rollback_uses_initial_snapshot_before_first_checkpoint(tmp_path):
+    driver, batches0 = _regression(tmp_path, ckpt_every=50)
+
+    def poisoned():
+        for s, (x, y) in batches0():
+            if s == 2:
+                x = x * jnp.nan
+            yield s, (x, y)
+
+    out = driver.run(poisoned(), 10)
+    assert out["rollbacks"] == 1
+    assert np.isfinite(out["losses"]).all()
+    assert out["final_step"] == 10
+    assert np.isfinite(np.asarray(driver.state[0])).all()

@@ -1,0 +1,134 @@
+"""Property-based invariants of the dist layer (DESIGN.md §12):
+error-feedback compression telescoping and ZeRO-1 spec validity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st  # skips if hypothesis missing
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.dist.compress import compress_grads, ef_init
+from repro.dist.sharding import named, params_pspecs, zero1_pspecs
+from repro.launch.mesh import make_debug_mesh
+from repro.models import build_model
+
+need4 = pytest.mark.skipif(
+    len(jax.devices()) < 4, reason="needs 4 (forced-host) devices"
+)
+
+
+# ------------------------------------------------- EF compression invariant
+def _ef_roundtrip(gs):
+    """Return (Σ q_t + ef_final, Σ g_t) for a gradient sequence."""
+    ef = ef_init({"w": gs[0]})
+    qsum = jnp.zeros_like(gs[0])
+    for g in gs:
+        gq, ef = compress_grads({"w": g}, ef)
+        qsum = qsum + gq["w"]
+    return qsum + ef["w"], sum(gs)
+
+
+def test_ef_telescoping_identity_deterministic():
+    rng = np.random.default_rng(7)
+    gs = [jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+          for _ in range(12)]
+    lhs, rhs = _ef_roundtrip(gs)
+    # Σ q_t + e_{T+1} = Σ g_t  (telescoping; float-exactness ~1e-4)
+    np.testing.assert_allclose(lhs, rhs, atol=1e-4, rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(
+    st.lists(st.floats(-10.0, 10.0, allow_nan=False, width=32),
+             min_size=8, max_size=8),
+    min_size=1, max_size=10,
+))
+def test_ef_telescoping_identity_property(seq):
+    gs = [jnp.asarray(row, jnp.float32) for row in seq]
+    lhs, rhs = _ef_roundtrip(gs)
+    scale = max(float(jnp.max(jnp.abs(rhs))), 1.0)
+    np.testing.assert_allclose(lhs, rhs, atol=1e-4 * scale)
+
+
+def test_ef_single_step_error_bounded_by_bucket():
+    g = {"w": jnp.asarray(np.random.default_rng(3).normal(size=(64,)),
+                          jnp.float32)}
+    gq, ef = compress_grads(g, ef_init(g))
+    bucket = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+    assert float(jnp.max(jnp.abs(ef["w"]))) <= bucket * 0.5 + 1e-7
+
+
+# ---------------------------------------------------- ZeRO-1 spec validity
+MESH_SHAPES = [(1, 1), (2, 1), (1, 2), (2, 2), (4, 1), (1, 4)]
+
+
+def _leaf_axes(p: P):
+    out = []
+    for e in tuple(p):
+        if e is None:
+            continue
+        out += list(e) if isinstance(e, tuple) else [e]
+    return out
+
+
+@need4
+@pytest.mark.parametrize("data,model", MESH_SHAPES)
+def test_zero1_each_mesh_axis_at_most_once(data, model):
+    cfg = get_arch("qwen3-14b").reduced()
+    m = build_model(cfg)
+    mesh = make_debug_mesh(data, model)
+    z = zero1_pspecs(m, mesh)
+    for leaf in jax.tree.leaves(z, is_leaf=lambda x: isinstance(x, P)):
+        axes = _leaf_axes(leaf)
+        assert len(axes) == len(set(axes)), leaf
+        assert set(axes) <= set(mesh.axis_names), leaf
+
+
+@need4
+@pytest.mark.parametrize("data,model", MESH_SHAPES)
+def test_zero1_specs_build_valid_shardings(data, model):
+    """NamedSharding construction + device_put validate divisibility."""
+    cfg = get_arch("qwen3-14b").reduced()
+    m = build_model(cfg)
+    mesh = make_debug_mesh(data, model)
+    shardings = named(mesh, zero1_pspecs(m, mesh))
+    assert all(
+        isinstance(s, NamedSharding) for s in jax.tree.leaves(shardings)
+    )
+    params = m.init(jax.random.PRNGKey(0))
+    placed = jax.device_put(params, shardings)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        params, placed,
+    )
+
+
+@need4
+def test_zero1_shards_strictly_more_than_tp_only():
+    cfg = get_arch("qwen3-14b").reduced()
+    m = build_model(cfg)
+    mesh = make_debug_mesh(2, 2)
+    base = jax.tree.leaves(params_pspecs(m, mesh),
+                           is_leaf=lambda x: isinstance(x, P))
+    z = jax.tree.leaves(zero1_pspecs(m, mesh),
+                        is_leaf=lambda x: isinstance(x, P))
+    n_base = sum(len(_leaf_axes(p)) for p in base)
+    n_z = sum(len(_leaf_axes(p)) for p in z)
+    assert n_z > n_base
+    assert any("data" in _leaf_axes(p) for p in z)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(MESH_SHAPES))
+def test_zero1_property_over_meshes(shape):
+    if len(jax.devices()) < shape[0] * shape[1]:
+        return
+    cfg = get_arch("stablelm-3b").reduced()
+    m = build_model(cfg)
+    mesh = make_debug_mesh(*shape)
+    for leaf in jax.tree.leaves(zero1_pspecs(m, mesh),
+                                is_leaf=lambda x: isinstance(x, P)):
+        axes = _leaf_axes(leaf)
+        assert len(axes) == len(set(axes))

@@ -1,0 +1,129 @@
+"""Derated-`available` coverage (DESIGN.md §12.5): plans under a sharded
+mesh must cap CD_exec at the per-shard slot budget, with §6.7
+compatibility-class grouping unchanged vs the single-chip path."""
+import jax
+import pytest
+
+from repro.core.cost_model import DEFAULT_SPEC
+from repro.core.gemm_desc import GemmDesc
+from repro.core.scheduler import ConcurrencyController, compat_key
+from repro.dist.resources import mesh_resources, shard_fraction
+from repro.launch.mesh import make_debug_mesh
+from repro.runtime import Runtime
+
+need4 = pytest.mark.skipif(
+    len(jax.devices()) < 4, reason="needs 4 (forced-host) devices"
+)
+
+
+class FakeMesh:
+    def __init__(self, **shape):
+        self.axis_names = tuple(shape)
+        self.shape = shape
+
+
+# Small-M GEMMs whose preferred CD saturates availability: the contrast
+# between the single-chip and derated plans is what the test is about.
+WORKLOAD = [GemmDesc(64, 256, 256)] * 12
+
+
+def test_mesh_resources_arithmetic():
+    res = mesh_resources(FakeMesh(data=2, model=4), max_cd=16)
+    assert res.model_shards == 4
+    assert res.frac == pytest.approx(0.25)
+    assert res.slot_budget == 4
+    assert res.spec.vmem_bytes == DEFAULT_SPEC.vmem_bytes // 4
+    assert res.spec.hbm_bw == pytest.approx(DEFAULT_SPEC.hbm_bw / 4)
+    # DP-only meshes do NOT derate: replicas run on disjoint chips.
+    res_dp = mesh_resources(FakeMesh(data=4), max_cd=16)
+    assert res_dp.slot_budget == 16 and res_dp.frac == 1.0
+    assert shard_fraction(FakeMesh(pod=2, data=16, model=16)) == pytest.approx(
+        1 / 16
+    )
+
+
+def test_plan_never_exceeds_derated_budget():
+    res = mesh_resources(FakeMesh(data=1, model=4), max_cd=16)
+    ctrl = ConcurrencyController(spec=res.spec)
+    derated = ctrl.plan(WORKLOAD, available=res.slot_budget)
+    assert derated.groups and all(
+        g.cd <= res.slot_budget for g in derated.groups
+    )
+    # ... while the single-chip plan for the same queue goes higher.
+    single = ConcurrencyController().plan(WORKLOAD, available=16)
+    assert max(g.cd for g in single.groups) > res.slot_budget
+
+
+def test_compat_grouping_unchanged_under_derating():
+    """§6.7 class partition is a property of the descriptors, not of the
+    mesh: derating caps group *size*, never regroups across classes."""
+    descs = (
+        [GemmDesc(64, 256, 256), GemmDesc(32, 256, 256)] * 3
+        + [GemmDesc(64, 512, 128)] * 4
+        + [GemmDesc(8, 256, 256, batch=4)] * 2
+    )
+    assert len({compat_key(d) for d in descs}) == 3
+    res = mesh_resources(FakeMesh(data=1, model=4), max_cd=16)
+    single = ConcurrencyController().plan(descs, available=16)
+    derated = ConcurrencyController(spec=res.spec).plan(
+        descs, available=res.slot_budget
+    )
+    for sched in (single, derated):
+        for g in sched.groups:
+            keys = {compat_key(descs[i]) for i in g.indices}
+            assert len(keys) == 1, "a launch must stay within one class"
+    # identical class partition: same multiset of indices per class key
+    def classes(sched):
+        out = {}
+        for g in sched.groups:
+            out.setdefault(compat_key(descs[g.indices[0]]), []).extend(
+                g.indices
+            )
+        return {k: sorted(v) for k, v in out.items()}
+
+    assert classes(single) == classes(derated)
+
+
+@need4
+def test_runtime_set_mesh_caps_telemetry_cd():
+    rt = Runtime()
+    res = rt.set_mesh(make_debug_mesh(1, 4))
+    assert res.slot_budget == 4 and rt.available == 4
+    for d in WORKLOAD:
+        rt.submit(d, tenant="t0")
+    rt.drain(now=0.0)
+    t = rt.telemetry
+    assert t.max_cd() <= res.slot_budget
+    assert t.summary()["max_cd"] <= res.slot_budget
+    assert t.completed == len(WORKLOAD)
+
+    # the single-chip runtime exceeds the derated budget on the same load
+    rt1 = Runtime()
+    for d in WORKLOAD:
+        rt1.submit(d, tenant="t0")
+    rt1.drain(now=0.0)
+    assert rt1.telemetry.max_cd() > res.slot_budget
+
+
+@need4
+def test_set_mesh_invalidates_plan_cache_and_rederates():
+    rt = Runtime()
+    for d in WORKLOAD:
+        rt.submit(d)
+    rt.drain(now=0.0)
+    assert rt.plan_cache_size > 0
+    chip_lib = rt.ctrl.lib
+    rt.set_mesh(make_debug_mesh(1, 4))
+    assert rt.plan_cache_size == 0
+    # the GO library derates with the spec: tiles tuned for full-chip
+    # VMEM would be wrong under a shard's share
+    assert rt.ctrl.lib is not chip_lib
+    assert rt.ctrl.lib.spec.vmem_bytes == rt.ctrl.spec.vmem_bytes
+    # derating is derived from the chip spec, never compounded
+    first = rt.ctrl.spec.vmem_bytes
+    rt.set_mesh(make_debug_mesh(1, 4))
+    assert rt.ctrl.spec.vmem_bytes == first
+    rt.set_mesh(make_debug_mesh(4, 1))
+    assert rt.ctrl.spec.vmem_bytes == DEFAULT_SPEC.vmem_bytes
+    assert rt.ctrl.lib is chip_lib
+    assert rt.available == 16

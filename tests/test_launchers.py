@@ -58,16 +58,32 @@ def test_grad_accumulation_matches_single_batch():
     state = train_init(model, opt, jax.random.PRNGKey(0))
     batch = make_batch(cfg, InputShape("t", 32, 8, "train"), 0)
 
-    s1 = make_train_step(model, opt, compute_dtype=jnp.float32)
+    g1, g4 = {}, {}
+
+    def cap(store):
+        def tf(g):
+            store["g"] = g
+            return g
+        return tf
+
+    s1 = make_train_step(model, opt, compute_dtype=jnp.float32,
+                         grad_transform=cap(g1))
     s4 = make_train_step(model, opt, compute_dtype=jnp.float32,
-                         n_microbatches=4)
+                         n_microbatches=4, grad_transform=cap(g4))
     st1, m1 = s1(state, batch)
     st4, m4 = s4(state, batch)
     np.testing.assert_allclose(
         float(m1["loss"]), float(m4["loss"]), rtol=1e-5
     )
-    # parameters after one update must agree closely
+    # The real invariant: the ACCUMULATED GRADS are equal (up to the fp
+    # noise of the split-batch reduction order).
+    for a, b in zip(jax.tree.leaves(g1["g"]), jax.tree.leaves(g4["g"])):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+    # Params after one AdamW step: the bias-corrected first step is
+    # ~sign(g)*lr per element, so an infinitesimal grad whose sign flips
+    # under reduction-order noise moves the param by up to 2*lr — bound
+    # the comparison by that, not by the grad tolerance.
     l1 = jax.tree.leaves(st1.params)
     l4 = jax.tree.leaves(st4.params)
     for a, b in zip(l1, l4):
-        np.testing.assert_allclose(a, b, rtol=1e-3, atol=2e-4)
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=2.1e-3)
