@@ -18,6 +18,14 @@ flush through the real pallas kernels (interpret mode on CPU) and checks
 the results against the XLA reference.
 
     PYTHONPATH=src python -m benchmarks.serving [--duration 0.5] [--rate 150]
+
+**Regenerating results/**: this script rewrites `results/serving.csv` and
+`results/serving_golib.json` on every run.  The GO library file records
+its schema version (`repro.core.library.SCHEMA_VERSION`); when the tuner
+search space changes (schema bump — e.g. v2's split-K axis), a stale
+library is detected at load, its entries discarded with a warning, and
+this run re-tunes and rewrites it at the current schema — it is never
+silently used to mis-plan.
 """
 from __future__ import annotations
 

@@ -1,0 +1,277 @@
+"""Tuner + dispatch fast-path benchmark — emits ``BENCH_tuning.json``.
+
+Measures the two perf claims of the vectorized-tuner work (DESIGN.md §13):
+
+1. **Tuner throughput** — wall-clock and cost-model-evaluation counts per
+   GEMM for
+   - the pre-vectorization scalar sweep (`tune_gemm_reference`, legacy
+     36-tile space, one model call per (tile, RC, CD) tuple),
+   - the batched sweep on the SAME space (apples-to-apples speedup;
+     entries are bitwise identical, so the modeled speedups are
+     unchanged by construction and asserted so), and
+   - the batched sweep on the EXPANDED space (63 tiles × split-K axis) —
+     the "10–100× larger search space for free" claim.
+2. **Flush fast path** — steady-state (plan-cache-hit) flush latency
+   percentiles and its cost-model-evaluation / signature-re-sort
+   counters, which must both be ZERO.
+
+Wall-clock thresholds are asserted only in the full run; ``--smoke``
+(the CI perf gate) asserts the **count-based** thresholds below, which
+are deterministic and flake-free on shared runners.
+
+    PYTHONPATH=src python -m benchmarks.tuning [--smoke] [--gemms N]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+from typing import Dict
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import numpy as np  # noqa: E402
+
+from benchmarks.context import RESULTS  # noqa: E402
+from repro.core import ConcurrencyController, GemmDesc, GOLibrary  # noqa: E402
+from repro.core.cost_model import EVAL_COUNTER, group_time  # noqa: E402
+from repro.core.predictor import generate_gemm_pool  # noqa: E402
+from repro.core.tuner import (  # noqa: E402
+    CANDIDATE_TILES,
+    LEGACY_CANDIDATE_TILES,
+    SPLIT_K_CANDIDATES,
+    tune_gemm_batch,
+    tune_gemm_reference,
+)
+from repro.runtime import Runtime, RuntimeConfig  # noqa: E402
+
+# ----------------------------------------------------------- committed gates
+# Count-based (CI --smoke, flake-free):
+MAX_EVALS_PER_GEMM = 300       # expanded space: 3·63 (①) + 4·12 (②) = 237
+FLUSH_HIT_EVALS = 0            # steady-state flush touches no cost model
+FLUSH_HIT_RESORTS = 0          # ... and never re-sorts a signature
+
+
+def max_model_calls(n_gemms: int) -> int:
+    """Model-call budget for a pool: the batched tuner makes a constant
+    ~2 calls per 512-desc chunk, so the gate is absolute-plus-slack —
+    NOT per-GEMM, which would false-fail tiny pools (--gemms 1)."""
+    return 8 + n_gemms // 4
+# Wall-clock (full run only):
+MIN_EQUAL_SPACE_SPEEDUP = 20.0
+MIN_EXPANDED_HEADROOM = 10.0
+
+# Skinny/decode shape classes where split-K is the only source of extra
+# parallel tiles (tm = tn = 1 over the whole tile space).
+DECODE_SHAPES = (
+    GemmDesc(8, 128, 16384),
+    GemmDesc(8, 128, 8192),
+    GemmDesc(16, 128, 12288),
+    GemmDesc(8, 256, 16384),
+)
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def bench_tuner(n_gemms: int) -> Dict[str, object]:
+    pool = generate_gemm_pool(n_gemms, seed=5)
+
+    # Warm both paths (numpy allocator, code paths) outside the timers.
+    tune_gemm_reference(pool[0])
+    tune_gemm_batch(pool[:4], tiles=LEGACY_CANDIDATE_TILES, split_ks=(1,))
+    tune_gemm_batch(pool[:4])
+
+    # -- scalar reference sweep (legacy space)
+    EVAL_COUNTER.reset()
+    t0 = time.perf_counter()
+    ref_entries = [tune_gemm_reference(d) for d in pool]
+    scalar_s = time.perf_counter() - t0
+    scalar_evals, scalar_calls = EVAL_COUNTER.snapshot()
+
+    # -- batched sweep, equal space (best-of-3: the sweeps are fast enough
+    # that a single allocator hiccup would dominate the ratio)
+    EVAL_COUNTER.reset()
+    eq_entries = tune_gemm_batch(pool, tiles=LEGACY_CANDIDATE_TILES,
+                                 split_ks=(1,))
+    eq_evals, eq_calls = EVAL_COUNTER.snapshot()
+    vec_equal_s = min(
+        _timed(lambda: tune_gemm_batch(pool, tiles=LEGACY_CANDIDATE_TILES,
+                                       split_ks=(1,)))
+        for _ in range(3)
+    )
+
+    # -- batched sweep, expanded space (63 tiles × split-K)
+    EVAL_COUNTER.reset()
+    tune_gemm_batch(pool)
+    full_evals, full_calls = EVAL_COUNTER.snapshot()
+    vec_full_s = min(_timed(lambda: tune_gemm_batch(pool)) for _ in range(3))
+
+    # parity: identical entries ⇒ modeled speedups unchanged
+    speedup_diff = 0.0
+    parity = True
+    for a, b in zip(ref_entries, eq_entries):
+        parity &= (a.isolated == b.isolated and a.go == b.go
+                   and a.rc_source == b.rc_source)
+        speedup_diff = max(
+            speedup_diff,
+            max(abs(a.speedup[c] - b.speedup[c]) for c in a.speedup),
+        )
+    n = len(pool)
+    return {
+        "gemms": n,
+        "search_space": {
+            "legacy_tiles": len(LEGACY_CANDIDATE_TILES),
+            "tiles": len(CANDIDATE_TILES),
+            "split_ks": list(SPLIT_K_CANDIDATES),
+            "expansion_factor": (len(CANDIDATE_TILES)
+                                 * len(SPLIT_K_CANDIDATES))
+            / len(LEGACY_CANDIDATE_TILES),
+        },
+        "scalar_us_per_gemm": 1e6 * scalar_s / n,
+        "vec_equal_us_per_gemm": 1e6 * vec_equal_s / n,
+        "vec_full_us_per_gemm": 1e6 * vec_full_s / n,
+        "equal_space_speedup": scalar_s / vec_equal_s,
+        "expanded_headroom": scalar_s / vec_full_s,
+        "scalar_evals_per_gemm": scalar_evals / n,
+        "scalar_model_calls_per_gemm": scalar_calls / n,
+        "vec_equal_evals_per_gemm": eq_evals / n,
+        "vec_equal_model_calls_per_gemm": eq_calls / n,
+        "vec_full_evals_per_gemm": full_evals / n,
+        "vec_full_model_calls": full_calls,
+        "vec_full_model_calls_budget": max_model_calls(n),
+        "entry_parity": bool(parity),
+        "max_abs_speedup_diff": speedup_diff,
+    }
+
+
+def bench_flush(rounds: int) -> Dict[str, object]:
+    rt = Runtime(ConcurrencyController(library=GOLibrary()),
+                 RuntimeConfig(window_s=0.0))
+    descs = ([GemmDesc(256, 512, 512)] * 4 + [GemmDesc(1024, 512, 512)]
+             + [GemmDesc(128, 128, 2048)] * 2)
+    rt.prewarm(descs)
+    for d in descs:                       # one cold round binds the plans
+        rt.submit(d, now=0.0)
+    rt.flush(now=1.0)
+
+    times = []
+    hit_evals = 0
+    for r in range(rounds):
+        now = 10.0 + r
+        for d in descs:
+            rt.submit(d, now=now)
+        e0 = EVAL_COUNTER.evals
+        t0 = time.perf_counter()
+        launches = rt.flush(now=now + 0.5)
+        times.append(time.perf_counter() - t0)
+        hit_evals = max(hit_evals, EVAL_COUNTER.evals - e0)
+        assert launches and all(l.cache_hit for l in launches)
+    lat = np.asarray(sorted(times))
+    # prewarm's offline planning pays (and meters) canonical sorts — the
+    # nonzero total proves the sig_resorts counter is live, while the
+    # flush-attributable share must be zero.
+    assert rt.telemetry.sig_resorts > 0
+    return {
+        "rounds": rounds,
+        "flush_p50_us": 1e6 * float(np.percentile(lat, 50)),
+        "flush_p99_us": 1e6 * float(np.percentile(lat, 99)),
+        "flush_evals_per_hit": hit_evals,
+        "sig_resorts_total": rt.telemetry.sig_resorts,
+        "flush_sig_resorts": rt.telemetry.flush_sig_resorts,
+        "steady_state_hit_rate": rt.telemetry.steady_state_hit_rate(),
+    }
+
+
+def bench_splitk() -> Dict[str, object]:
+    """Modeled split-K wins on the decode classes at CD ≥ 8."""
+    out = {}
+    wins = 0
+    for d in DECODE_SHAPES:
+        e = tune_gemm_batch([d])[0]
+        e1 = tune_gemm_batch([d], split_ks=(1,))[0]
+        per_cd = {}
+        for cd in (8, 16):
+            t_split = group_time([(d, e.go[cd])] * cd)
+            t_plain = group_time([(d, e1.go[cd])] * cd)
+            per_cd[cd] = {
+                "go_tile": e.go[cd].key(),
+                "split_k": e.go[cd].split_k,
+                "win_vs_best_unsplit": t_plain / t_split,
+            }
+        if any(v["split_k"] > 1 and v["win_vs_best_unsplit"] > 1.0
+               for v in per_cd.values()):
+            wins += 1
+        out[d.key()] = per_cd
+    return {"classes": out, "classes_won": wins}
+
+
+def main(argv=None) -> Dict[str, object]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small pool; assert count-based gates only (CI)")
+    ap.add_argument("--gemms", type=int, default=None,
+                    help="tuning pool size (default 8 smoke / 64 full)")
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="steady-state flush rounds (default 100/300)")
+    args = ap.parse_args(argv)
+    n = args.gemms or (8 if args.smoke else 64)
+    rounds = args.rounds or (100 if args.smoke else 300)
+
+    report: Dict[str, object] = {"smoke": bool(args.smoke)}
+    report["tuner"] = bench_tuner(n)
+    report["flush"] = bench_flush(rounds)
+    report["split_k"] = bench_splitk()
+
+    RESULTS.mkdir(exist_ok=True)
+    out_path = RESULTS / "BENCH_tuning.json"
+    out_path.write_text(json.dumps(report, indent=1))
+    tun, flu, spk = report["tuner"], report["flush"], report["split_k"]
+    print(f"# tuner: scalar {tun['scalar_us_per_gemm']:.0f}us/GEMM | "
+          f"vec equal-space {tun['vec_equal_us_per_gemm']:.1f}us/GEMM "
+          f"({tun['equal_space_speedup']:.1f}x) | vec expanded "
+          f"{tun['vec_full_us_per_gemm']:.1f}us/GEMM "
+          f"({tun['expanded_headroom']:.1f}x headroom, "
+          f"{tun['search_space']['expansion_factor']:.0f}x space)")
+    print(f"# flush: p50 {flu['flush_p50_us']:.1f}us p99 "
+          f"{flu['flush_p99_us']:.1f}us | evals/hit "
+          f"{flu['flush_evals_per_hit']} | flush sig re-sorts "
+          f"{flu['flush_sig_resorts']}")
+    print(f"# split-K: {spk['classes_won']}/{len(DECODE_SHAPES)} decode "
+          f"classes won at CD>=8")
+    print(f"# wrote {out_path}")
+
+    # ---- count-based gates (always; deterministic, CI-safe)
+    assert tun["entry_parity"] and tun["max_abs_speedup_diff"] == 0.0, \
+        "batched tuner diverged from the scalar sweep"
+    assert tun["vec_full_evals_per_gemm"] <= MAX_EVALS_PER_GEMM, \
+        (tun["vec_full_evals_per_gemm"], MAX_EVALS_PER_GEMM)
+    assert tun["vec_full_model_calls"] <= tun["vec_full_model_calls_budget"], \
+        (tun["vec_full_model_calls"], tun["vec_full_model_calls_budget"])
+    assert flu["flush_evals_per_hit"] == FLUSH_HIT_EVALS, \
+        f"hit flush performed {flu['flush_evals_per_hit']} cost-model evals"
+    assert flu["flush_sig_resorts"] == FLUSH_HIT_RESORTS
+    assert spk["classes_won"] >= 1, "no decode class won with split-K"
+    # ---- wall-clock gates (full run only; excluded from CI smoke)
+    if not args.smoke:
+        assert tun["equal_space_speedup"] >= MIN_EQUAL_SPACE_SPEEDUP, \
+            f"equal-space speedup {tun['equal_space_speedup']:.1f}x < " \
+            f"{MIN_EQUAL_SPACE_SPEEDUP}x"
+        assert tun["expanded_headroom"] >= MIN_EXPANDED_HEADROOM, \
+            f"expanded headroom {tun['expanded_headroom']:.1f}x < " \
+            f"{MIN_EXPANDED_HEADROOM}x"
+        print(f"# acceptance: equal-space {tun['equal_space_speedup']:.1f}x "
+              f">= {MIN_EQUAL_SPACE_SPEEDUP}x, headroom "
+              f"{tun['expanded_headroom']:.1f}x >= "
+              f"{MIN_EXPANDED_HEADROOM}x ✓")
+    return report
+
+
+if __name__ == "__main__":
+    main()

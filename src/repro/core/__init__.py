@@ -29,7 +29,13 @@ from repro.core.scheduler import (
     Schedule,
     compat_key,
 )
-from repro.core.tuner import CDS, GOEntry, go_kernel_properties, tune_gemm
+from repro.core.tuner import (
+    CDS,
+    GOEntry,
+    go_kernel_properties,
+    tune_gemm,
+    tune_gemm_batch,
+)
 
 __all__ = [
     "DEFAULT_SPEC", "RC_FRACTIONS", "TPUSpec", "group_time", "isolated_time",
@@ -39,4 +45,5 @@ __all__ = [
     "profile_dataset", "train_predictor", "CP_OVERHEAD_S",
     "ConcurrencyController", "GemmRequest", "GroupPlan", "Schedule",
     "compat_key", "CDS", "GOEntry", "go_kernel_properties", "tune_gemm",
+    "tune_gemm_batch",
 ]

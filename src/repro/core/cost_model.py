@@ -16,6 +16,25 @@ paper shows drive concurrency behaviour:
    small GEMMs have fill/drain bubbles and per-launch overhead that
    grouping amortizes (paper's "fewer waves ⇒ better overlap").
 
+**Split-K** (DESIGN.md §13) is a third, orthogonal axis: a kernel with
+``split_k = s`` partitions the sequential K sweep into ``s`` independent
+grid slices, each accumulating an f32 *partial* C that a reduce epilogue
+sums.  The model charges the partials' extra HBM round-trip
+(``2·s·M·N·4`` bytes) plus one extra launch, and credits the ``s×``
+larger parallel tile count — which shrinks the per-tile fill/drain ramp,
+the dominant cost for single-tile skinny GEMMs (decode-shape M≤mxu,
+N≤bn), exactly the Stream-K tail-quantization recovery.
+
+**Evaluation layout** (DESIGN.md §13): the model is written once, in
+NumPy, over struct-of-arrays (`DescBatch` × `TileBatch` × broadcastable
+budget/bandwidth arrays).  The scalar functions (`kernel_stats`,
+`isolated_time`, `group_time`, …) are thin wrappers over the same code
+path, so batch and scalar evaluation are bitwise identical by
+construction; `*_ref` pure-Python ports are kept as the parity oracle
+and as the pre-vectorization baseline for `benchmarks/tuning.py`.
+`EVAL_COUNTER` counts every (GEMM, tile, budget) evaluation so perf
+regressions are count-detectable (flake-free in CI).
+
 Times are in seconds.  Absolute values are estimates; the paper's metrics
 are *ratios* (concurrent vs sequential), which are robust to the absolute
 calibration.
@@ -25,6 +44,8 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, replace
 from typing import Sequence
+
+import numpy as np
 
 from repro.core.gemm_desc import GemmDesc
 from repro.kernels.gemm.ops import TileConfig
@@ -60,6 +81,135 @@ class TPUSpec:
 DEFAULT_SPEC = TPUSpec()
 RC_FRACTIONS = {"GPU": 1.0, "GPU/2": 0.5, "GPU/4": 0.25}
 
+_STRIDED_DMA = 1 / 0.85  # paper Fig. 5(b) ③: strided operand loses ~15%
+
+
+class EvalCounter:
+    """Counts cost-model evaluations for count-based perf regression gates.
+
+    ``evals`` is the number of (GEMM, tile, budget) tuples evaluated —
+    one per element of a batched call; ``calls`` is the number of Python
+    entries into the model (the per-call overhead the vectorized tuner
+    amortizes).  `benchmarks/tuning.py` and the runtime fast-path tests
+    assert on deltas of these.
+
+    Counts are **per-thread** (thread-local storage): a delta taken
+    around a code region (e.g. `Runtime.flush`) measures only that
+    thread's evaluations, so a concurrent `GOLibrary` tune on another
+    thread cannot fake a fast-path regression — and the unsynchronized
+    `+=` never races.
+    """
+
+    __slots__ = ("_tls",)
+
+    def __init__(self) -> None:
+        import threading
+
+        self._tls = threading.local()
+
+    def _counts(self) -> list:
+        c = getattr(self._tls, "counts", None)
+        if c is None:
+            c = self._tls.counts = [0, 0]
+        return c
+
+    @property
+    def evals(self) -> int:
+        return self._counts()[0]
+
+    @property
+    def calls(self) -> int:
+        return self._counts()[1]
+
+    def add(self, n: int) -> None:
+        c = self._counts()
+        c[0] += int(n)
+        c[1] += 1
+
+    def reset(self) -> None:
+        self._tls.counts = [0, 0]
+
+    def snapshot(self) -> tuple[int, int]:
+        return tuple(self._counts())
+
+
+EVAL_COUNTER = EvalCounter()
+
+
+# --------------------------------------------------------- struct-of-arrays
+@dataclass(frozen=True)
+class TileBatch:
+    """Struct-of-arrays over candidate `TileConfig`s (int64 fields)."""
+
+    bm: np.ndarray
+    bn: np.ndarray
+    bk: np.ndarray
+    split_k: np.ndarray
+
+    @staticmethod
+    def from_tiles(tiles: Sequence[TileConfig]) -> "TileBatch":
+        return TileBatch(
+            bm=np.asarray([t.bm for t in tiles], np.int64),
+            bn=np.asarray([t.bn for t in tiles], np.int64),
+            bk=np.asarray([t.bk for t in tiles], np.int64),
+            split_k=np.asarray([t.split_k for t in tiles], np.int64),
+        )
+
+    def vmem_bytes(self, in_bytes: int = 2, acc_bytes: int = 4) -> np.ndarray:
+        """Mirrors `TileConfig.vmem_bytes` (raw, unclamped dims)."""
+        ab = 2 * (self.bm * self.bk + self.bk * self.bn) * in_bytes
+        acc = self.bm * self.bn * acc_bytes
+        out = self.bm * self.bn * in_bytes
+        return ab + acc + out
+
+    def tile(self, i: int) -> TileConfig:
+        return TileConfig(int(self.bm[i]), int(self.bn[i]), int(self.bk[i]),
+                          int(self.split_k[i]))
+
+    def __len__(self) -> int:
+        return int(np.broadcast(self.bm, self.bn, self.bk, self.split_k).size)
+
+
+@dataclass(frozen=True)
+class DescBatch:
+    """Struct-of-arrays over `GemmDesc`s (heterogeneous group members)."""
+
+    M: np.ndarray
+    N: np.ndarray
+    K: np.ndarray
+    batch: np.ndarray
+    in_bytes: np.ndarray
+    ta: np.ndarray
+    tb: np.ndarray
+    f32: np.ndarray
+
+    @staticmethod
+    def from_descs(descs: Sequence[GemmDesc]) -> "DescBatch":
+        return DescBatch(
+            M=np.asarray([d.M for d in descs], np.int64),
+            N=np.asarray([d.N for d in descs], np.int64),
+            K=np.asarray([d.K for d in descs], np.int64),
+            batch=np.asarray([d.batch for d in descs], np.int64),
+            in_bytes=np.asarray([d.in_bytes for d in descs], np.int64),
+            ta=np.asarray([d.ta for d in descs], bool),
+            tb=np.asarray([d.tb for d in descs], bool),
+            f32=np.asarray([d.dtype == "f32" for d in descs], bool),
+        )
+
+    def peak(self, spec: TPUSpec) -> np.ndarray:
+        return np.where(self.f32, spec.peak_flops_fp32, spec.peak_flops_bf16)
+
+
+def _desc_fields(d):
+    # GemmDesc and DescBatch expose the same field names (scalar vs array).
+    return (d.M, d.N, d.K, d.batch, d.in_bytes, d.ta, d.tb)
+
+
+def _peak_of(d, spec: TPUSpec):
+    if isinstance(d, GemmDesc):
+        return spec.peak(d.dtype)
+    return d.peak(spec)
+
 
 @dataclass(frozen=True)
 class KernelStats:
@@ -67,64 +217,218 @@ class KernelStats:
     re-expressed for TPU (DESIGN.md §2); consumed by the predictor's
     feature vector (DESIGN.md §4) and the tuner (DESIGN.md §3)."""
 
-    n_tiles: int          # = #WGs
+    n_tiles: int          # = #WGs (× split_k slices)
     waves: float          # pipeline waves (tiles / in-flight slots)
     occupancy: float      # VMEM-utilization fraction of the budget used
-    vmem_bytes: int       # working set (dbl-buffered panels + acc)
+    vmem_bytes: float     # working set (dbl-buffered panels + acc)
     hbm_bytes: float      # total traffic with panel-residency decision
     flops: float          # padded (includes tile-edge waste)
     mxu_util: float       # alignment efficiency
     a_resident: bool      # A row-panel held in VMEM (traffic saver)
+    splits: int = 1       # effective split-K slice count (≤ k-tiles)
 
 
+@dataclass(frozen=True)
+class KernelStatsBatch:
+    """`KernelStats` as broadcast NumPy arrays (one slot per evaluation)."""
+
+    n_tiles: np.ndarray
+    waves: np.ndarray
+    occupancy: np.ndarray
+    vmem_bytes: np.ndarray
+    hbm_bytes: np.ndarray
+    flops: np.ndarray
+    mxu_util: np.ndarray
+    a_resident: np.ndarray
+    splits: np.ndarray
+
+    def item(self, i=()) -> KernelStats:
+        return KernelStats(
+            n_tiles=int(self.n_tiles[i]),
+            waves=float(self.waves[i]),
+            occupancy=float(self.occupancy[i]),
+            vmem_bytes=float(self.vmem_bytes[i]),
+            hbm_bytes=float(self.hbm_bytes[i]),
+            flops=float(self.flops[i]),
+            mxu_util=float(self.mxu_util[i]),
+            a_resident=bool(self.a_resident[i]),
+            splits=int(self.splits[i]),
+        )
+
+
+# ------------------------------------------------------------- batched core
+@dataclass(frozen=True)
+class TilePrecomp:
+    """Budget-independent tile math, factored out so repeated sweeps over
+    the same (desc, tiles) pair with different budgets (the RC fractions in
+    step ①, the CD shares in step ②) pay the tile arithmetic once."""
+
+    tn: np.ndarray        # j-sweep length (A re-read factor)
+    splits: np.ndarray    # effective split-K slice count (≤ k-tiles)
+    n_tiles: np.ndarray   # parallel grid tiles (× splits)
+    ws: np.ndarray        # per-instance working set
+    a_panel: np.ndarray   # per-slice A row panel (bm · K/s · bytes)
+    a_unit: np.ndarray    # one full A read: M·K·bytes·batch·stream
+    bc_bytes: np.ndarray  # B + C + split-K partial traffic
+    flops: np.ndarray     # padded FLOPs
+    util: np.ndarray      # MXU alignment efficiency
+    peak: np.ndarray      # dtype peak FLOP/s
+
+
+def tile_precompute(d, t, spec: TPUSpec = DEFAULT_SPEC) -> TilePrecomp:
+    M, N, K, batch, in_bytes, ta, tb = _desc_fields(d)
+    mxu = spec.mxu_dim
+    bm = np.minimum(t.bm, _round_up(M, mxu))
+    bn = np.minimum(t.bn, _round_up(N, mxu))
+    bk = np.minimum(t.bk, _round_up(K, mxu))
+    tm, tn, tk = _cdiv(M, bm), _cdiv(N, bn), _cdiv(K, bk)
+    # Split-K: s independent K-slices, each a parallel grid instance.
+    s = np.minimum(t.split_k, tk)
+    n_tiles = tm * tn * s * batch
+
+    ws = (2 * (bm * bk + bk * bn) * in_bytes
+          + bm * bn * 4 + bm * bn * in_bytes)
+    # A row-panel: bm x (K / split) held in VMEM across the j sweep.
+    a_panel = bm * K * in_bytes / s
+    # Transposed storage streams with strided DMA — paper Fig. 5(b) ③'s
+    # layout effect; v5e DMA loses ~15% on the strided operand.
+    if isinstance(d, GemmDesc):
+        a_stream = _STRIDED_DMA if ta else 1.0
+        b_stream = _STRIDED_DMA if tb else 1.0
+    else:
+        a_stream = np.where(ta, _STRIDED_DMA, 1.0)
+        b_stream = np.where(tb, _STRIDED_DMA, 1.0)
+    a_unit = M * K * in_bytes * batch * a_stream
+    b_bytes = tm * (K * N * in_bytes * batch) * b_stream
+    c_bytes = M * N * in_bytes * batch
+    # Split-K epilogue traffic: each slice writes an f32 partial C and the
+    # reduce reads them all back (2·s·M·N·4); zero when un-split.
+    part_bytes = np.where(s > 1, s * (2 * (M * N * 4) * batch), 0.0)
+    bc_bytes = (b_bytes + c_bytes) + part_bytes
+
+    # padded FLOPs (tile-edge waste)
+    flops = 2.0 * (tm * bm) * (tn * bn) * (tk * bk) * batch
+    util = (
+        _align_eff(bm, mxu)
+        * _align_eff(bn, mxu)
+        * _align_eff(bk, mxu)
+    )
+    return TilePrecomp(
+        tn=tn, splits=s, n_tiles=n_tiles, ws=ws, a_panel=a_panel,
+        a_unit=np.asarray(a_unit), bc_bytes=bc_bytes, flops=flops, util=util,
+        peak=np.asarray(_peak_of(d, spec)),
+    )
+
+
+def kernel_stats_batch(
+    d, t, vmem_budget=None, spec: TPUSpec = DEFAULT_SPEC,
+    pre: TilePrecomp | None = None,
+) -> KernelStatsBatch:
+    """Vectorized `kernel_stats`: ``d`` is a `GemmDesc` or `DescBatch`,
+    ``t`` a `TileConfig` or `TileBatch`, ``vmem_budget`` a scalar or array;
+    all broadcast together.  This is THE model — the scalar path wraps it.
+    """
+    p = pre if pre is not None else tile_precompute(d, t, spec)
+    budget = spec.vmem_bytes if vmem_budget is None else vmem_budget
+
+    # A-panel residency: partial fit ⇒ partial reuse (smooth, not a
+    # cliff): the resident fraction of the panel is re-read 1x, the rest
+    # tn x.
+    resid_frac = np.minimum(np.maximum(
+        (budget - p.ws) / p.a_panel, 0.0), 1.0)
+    a_resident = resid_frac >= 1.0
+    eff_reads = p.tn - resid_frac * (p.tn - 1)
+    hbm = eff_reads * p.a_unit + p.bc_bytes
+
+    slots = np.maximum(1, budget // p.ws)
+    waves = p.n_tiles / np.minimum(slots, spec.pipeline_fill_tiles * 4)
+    occ = np.minimum(1.0, (p.ws + resid_frac * p.a_panel) / budget)
+    EVAL_COUNTER.add(np.size(waves))
+    return KernelStatsBatch(
+        n_tiles=p.n_tiles,
+        waves=waves,
+        occupancy=occ,
+        vmem_bytes=p.ws + np.where(a_resident, p.a_panel, 0.0),
+        hbm_bytes=hbm,
+        flops=p.flops,
+        mxu_util=p.util,
+        a_resident=a_resident,
+        splits=p.splits,
+    )
+
+
+def isolated_time_batch(
+    d, t, spec: TPUSpec = DEFAULT_SPEC, vmem_budget=None, bw_frac=1.0,
+    pre: TilePrecomp | None = None,
+) -> np.ndarray:
+    """Vectorized `isolated_time` (one launch per evaluation slot; split-K
+    kernels pay one extra launch for the reduce epilogue)."""
+    p = pre if pre is not None else tile_precompute(d, t, spec)
+    st = kernel_stats_batch(d, t, vmem_budget, spec, pre=p)
+    compute = st.flops / (p.peak * st.mxu_util)
+    bw = spec.hbm_bw * bw_frac
+    memory = st.hbm_bytes / bw
+    # fill/drain bubbles: first/last tiles can't overlap DMA with compute
+    ramp = spec.pipeline_fill_tiles * (st.hbm_bytes / st.n_tiles / bw)
+    launches = np.where(st.splits > 1, 2.0, 1.0)
+    return (np.maximum(compute, memory) + ramp
+            + launches * spec.launch_overhead_s)
+
+
+def group_time_batch(
+    d: GemmDesc, t, cds, spec: TPUSpec = DEFAULT_SPEC,
+    pre: TilePrecomp | None = None,
+) -> np.ndarray:
+    """Vectorized *homogeneous* `group_time`: ``cd`` identical members per
+    group, one group per (cd, tile) pair.  Returns shape
+    ``(len(cds), len(tiles))``.  One batched stats call evaluates every
+    (CD share × tile) slot; the member sums use the same left-to-right
+    accumulation as the scalar member loop, so results are bitwise equal
+    to ``group_time([(d, tile)] * cd)``.
+    """
+    cds = [int(c) for c in np.atleast_1d(cds)]
+    p = pre if pre is not None else tile_precompute(d, t, spec)
+    # The CD axis is prepended to whatever batch shape (desc × tile) the
+    # inputs broadcast to.
+    rest = np.broadcast_shapes(np.shape(p.ws), np.shape(p.n_tiles),
+                               np.shape(p.bc_bytes))
+    shares = np.asarray([spec.vmem_bytes // c for c in cds],
+                        np.int64).reshape((len(cds),) + (1,) * len(rest))
+    st = kernel_stats_batch(d, t, vmem_budget=shares, spec=spec, pre=p)
+    comp = np.broadcast_to(st.flops / (p.peak * st.mxu_util),
+                           st.hbm_bytes.shape)
+    mem = st.hbm_bytes / spec.hbm_bw
+    ramp = spec.pipeline_fill_tiles * (st.hbm_bytes / st.n_tiles
+                                       / spec.hbm_bw)
+    # Stack the four per-member quantities and fold each row's cd copies
+    # left-to-right (NOT cd · x, which rounds differently than the scalar
+    # member loop).
+    quants = np.stack([comp, mem, np.maximum(comp, mem),
+                       np.broadcast_to(st.vmem_bytes, mem.shape)])
+    acc = quants.copy()
+    for r, cd in enumerate(cds):
+        row = quants[:, r]
+        arow = acc[:, r]
+        for _ in range(cd - 1):
+            arow += row
+    sum_c, sum_m, serial, total_ws = acc
+    pressure = total_ws / spec.vmem_bytes
+    # pressure > 0 always (tile working sets are positive)
+    overlap = np.minimum(1.0, 1.0 / pressure)
+    ideal = np.maximum(sum_c, sum_m)
+    t_exec = overlap * ideal + (1.0 - overlap) * (
+        serial * (1.0 + 0.25 * np.maximum(0.0, pressure - 1.0))
+    )
+    launches = np.where(st.splits > 1, 2.0, 1.0)
+    return t_exec + ramp + launches * spec.launch_overhead_s
+
+
+# ------------------------------------------------------------ scalar façade
 def kernel_stats(
     d: GemmDesc, t: TileConfig, vmem_budget: int | None = None,
     spec: TPUSpec = DEFAULT_SPEC,
 ) -> KernelStats:
-    budget = vmem_budget if vmem_budget is not None else spec.vmem_bytes
-    bm = min(t.bm, _round_up(d.M, spec.mxu_dim))
-    bn = min(t.bn, _round_up(d.N, spec.mxu_dim))
-    bk = min(t.bk, _round_up(d.K, spec.mxu_dim))
-    tm, tn, tk = _cdiv(d.M, bm), _cdiv(d.N, bn), _cdiv(d.K, bk)
-    n_tiles = tm * tn * d.batch
-
-    ws = TileConfig(bm, bn, bk).vmem_bytes(d.in_bytes)
-    # A row-panel residency: bm x K panel kept in VMEM across the j sweep.
-    # Partial fit ⇒ partial reuse (smooth, not a cliff): the resident
-    # fraction of the panel is re-read 1x, the rest tn x.
-    a_panel = bm * d.K * d.in_bytes
-    resid_frac = min(max((budget - ws) / max(a_panel, 1), 0.0), 1.0)
-    a_resident = resid_frac >= 1.0
-    eff_reads = tn - resid_frac * (tn - 1)
-    # Transposed storage streams with strided DMA — paper Fig. 5(b) ③'s
-    # layout effect; v5e DMA loses ~15% on the strided operand.
-    a_stream = 1 / 0.85 if d.ta else 1.0
-    b_stream = 1 / 0.85 if d.tb else 1.0
-    a_bytes = eff_reads * d.M * d.K * d.in_bytes * d.batch * a_stream
-    b_bytes = tm * d.K * d.N * d.in_bytes * d.batch * b_stream
-    c_bytes = d.M * d.N * d.in_bytes * d.batch
-    hbm = float(a_bytes + b_bytes + c_bytes)
-
-    # padded FLOPs (tile-edge waste)
-    flops = 2.0 * (tm * bm) * (tn * bn) * (tk * bk) * d.batch
-    util = (
-        _align_eff(bm, spec.mxu_dim)
-        * _align_eff(bn, spec.mxu_dim)
-        * _align_eff(bk, spec.mxu_dim)
-    )
-    slots = max(1, budget // max(ws, 1))
-    waves = n_tiles / min(slots, spec.pipeline_fill_tiles * 4)
-    occ = min(1.0, (ws + resid_frac * a_panel) / max(budget, 1))
-    return KernelStats(
-        n_tiles=n_tiles,
-        waves=waves,
-        occupancy=occ,
-        vmem_bytes=ws + (a_panel if a_resident else 0),
-        hbm_bytes=hbm,
-        flops=flops,
-        mxu_util=util,
-        a_resident=a_resident,
-    )
+    return kernel_stats_batch(d, t, vmem_budget, spec).item()
 
 
 def isolated_time(
@@ -132,20 +436,22 @@ def isolated_time(
     vmem_budget: int | None = None, bw_frac: float = 1.0,
 ) -> float:
     """Modeled latency of one GEMM kernel run alone (one launch)."""
-    st = kernel_stats(d, t, vmem_budget, spec)
-    compute = st.flops / (spec.peak(d.dtype) * st.mxu_util)
-    memory = st.hbm_bytes / (spec.hbm_bw * bw_frac)
-    # fill/drain bubbles: first/last tiles can't overlap DMA with compute
-    per_tile_mem = st.hbm_bytes / max(st.n_tiles, 1) / (spec.hbm_bw * bw_frac)
-    ramp = spec.pipeline_fill_tiles * per_tile_mem
-    return max(compute, memory) + ramp + spec.launch_overhead_s
+    return float(isolated_time_batch(d, t, spec, vmem_budget, bw_frac))
 
 
 def sequential_time(
     members: Sequence[tuple[GemmDesc, TileConfig]],
     spec: TPUSpec = DEFAULT_SPEC,
 ) -> float:
-    return sum(isolated_time(d, t, spec) for d, t in members)
+    if not members:
+        return 0.0
+    db = DescBatch.from_descs([d for d, _ in members])
+    tb = TileBatch.from_tiles([t for _, t in members])
+    times = isolated_time_batch(db, tb, spec)
+    acc = 0.0
+    for v in times:
+        acc += float(v)
+    return acc
 
 
 def group_time(
@@ -159,31 +465,40 @@ def group_time(
     filled by compute-bound members' tiles.  The overlap degrades toward
     serial execution as the aggregate working set overflows VMEM, and
     overflowing also inflates traffic (panel-residency loss accounted per
-    member via the VMEM *share*).
+    member via the VMEM *share*).  Heterogeneous members are evaluated in
+    one batched model call; the float folds run left-to-right so the
+    result is bitwise identical to the pre-vectorization member loop.
     """
     G = len(members)
     if G == 0:
         return 0.0
     share = spec.vmem_bytes // G
-    comps, mems, ramps = [], [], []
-    for d, t in members:
-        st = kernel_stats(d, t, vmem_budget=share, spec=spec)
-        comps.append(st.flops / (spec.peak(d.dtype) * st.mxu_util))
-        mems.append(st.hbm_bytes / spec.hbm_bw)
-        per_tile_mem = st.hbm_bytes / max(st.n_tiles, 1) / spec.hbm_bw
-        ramps.append(spec.pipeline_fill_tiles * per_tile_mem)
-    total_ws = sum(
-        kernel_stats(d, t, vmem_budget=share, spec=spec).vmem_bytes
-        for d, t in members
-    )
+    db = DescBatch.from_descs([d for d, _ in members])
+    tb = TileBatch.from_tiles([t for _, t in members])
+    st = kernel_stats_batch(db, tb, vmem_budget=share, spec=spec)
+    comps = st.flops / (db.peak(spec) * st.mxu_util)
+    mems = st.hbm_bytes / spec.hbm_bw
+    ramps = spec.pipeline_fill_tiles * (st.hbm_bytes / st.n_tiles
+                                        / spec.hbm_bw)
+    sum_c = _fold(comps)
+    sum_m = _fold(mems)
+    serial = _fold(np.maximum(comps, mems))
+    total_ws = _fold(st.vmem_bytes)
     pressure = total_ws / spec.vmem_bytes
     overlap = min(1.0, 1.0 / pressure) if pressure > 0 else 1.0
-    ideal = max(sum(comps), sum(mems))
-    serial = sum(max(c, m) for c, m in zip(comps, mems))
+    ideal = max(sum_c, sum_m)
     t_exec = overlap * ideal + (1.0 - overlap) * (
         serial * (1.0 + 0.25 * max(0.0, pressure - 1.0))
     )
-    return t_exec + max(ramps) + spec.launch_overhead_s
+    launches = 2.0 if bool(np.any(st.splits > 1)) else 1.0
+    return t_exec + float(np.max(ramps)) + launches * spec.launch_overhead_s
+
+
+def _fold(x: np.ndarray) -> float:
+    acc = 0.0
+    for v in x:
+        acc += float(v)
+    return acc
 
 
 def speedup_vs_sequential(
@@ -193,13 +508,114 @@ def speedup_vs_sequential(
     return sequential_time(members, spec) / group_time(members, spec)
 
 
-def _cdiv(a: int, b: int) -> int:
+# ------------------------------------------------- pure-Python reference
+def kernel_stats_ref(
+    d: GemmDesc, t: TileConfig, vmem_budget: int | None = None,
+    spec: TPUSpec = DEFAULT_SPEC,
+) -> KernelStats:
+    """Pure-Python port of the model — the parity oracle for the batched
+    path and the scalar-loop baseline timed by `benchmarks/tuning.py`.
+    Keep every operation in the same order as the batched path
+    (`tile_precompute` + `kernel_stats_batch`) so results stay bitwise
+    equal."""
+    EVAL_COUNTER.add(1)
+    budget = vmem_budget if vmem_budget is not None else spec.vmem_bytes
+    bm = min(t.bm, _round_up(d.M, spec.mxu_dim))
+    bn = min(t.bn, _round_up(d.N, spec.mxu_dim))
+    bk = min(t.bk, _round_up(d.K, spec.mxu_dim))
+    tm, tn, tk = _cdiv(d.M, bm), _cdiv(d.N, bn), _cdiv(d.K, bk)
+    s = min(t.split_k, tk)
+    n_tiles = tm * tn * s * d.batch
+
+    ws = (2 * (bm * bk + bk * bn) * d.in_bytes
+          + bm * bn * 4 + bm * bn * d.in_bytes)
+    a_panel = bm * d.K * d.in_bytes / s
+    a_stream = _STRIDED_DMA if d.ta else 1.0
+    b_stream = _STRIDED_DMA if d.tb else 1.0
+    a_unit = d.M * d.K * d.in_bytes * d.batch * a_stream
+    b_bytes = tm * (d.K * d.N * d.in_bytes * d.batch) * b_stream
+    c_bytes = d.M * d.N * d.in_bytes * d.batch
+    part_bytes = s * (2 * (d.M * d.N * 4) * d.batch) if s > 1 else 0.0
+    bc_bytes = (b_bytes + c_bytes) + part_bytes
+
+    resid_frac = min(max((budget - ws) / a_panel, 0.0), 1.0)
+    a_resident = resid_frac >= 1.0
+    eff_reads = tn - resid_frac * (tn - 1)
+    hbm = eff_reads * a_unit + bc_bytes
+
+    flops = 2.0 * (tm * bm) * (tn * bn) * (tk * bk) * d.batch
+    util = (
+        _align_eff(bm, spec.mxu_dim)
+        * _align_eff(bn, spec.mxu_dim)
+        * _align_eff(bk, spec.mxu_dim)
+    )
+    slots = max(1, budget // ws)
+    waves = n_tiles / min(slots, spec.pipeline_fill_tiles * 4)
+    occ = min(1.0, (ws + resid_frac * a_panel) / budget)
+    return KernelStats(
+        n_tiles=n_tiles,
+        waves=waves,
+        occupancy=occ,
+        vmem_bytes=ws + (a_panel if a_resident else 0.0),
+        hbm_bytes=hbm,
+        flops=flops,
+        mxu_util=util,
+        a_resident=a_resident,
+        splits=s,
+    )
+
+
+def isolated_time_ref(
+    d: GemmDesc, t: TileConfig, spec: TPUSpec = DEFAULT_SPEC,
+    vmem_budget: int | None = None, bw_frac: float = 1.0,
+) -> float:
+    st = kernel_stats_ref(d, t, vmem_budget, spec)
+    compute = st.flops / (spec.peak(d.dtype) * st.mxu_util)
+    bw = spec.hbm_bw * bw_frac
+    memory = st.hbm_bytes / bw
+    ramp = spec.pipeline_fill_tiles * (st.hbm_bytes / st.n_tiles / bw)
+    launches = 2.0 if st.splits > 1 else 1.0
+    return max(compute, memory) + ramp + launches * spec.launch_overhead_s
+
+
+def group_time_ref(
+    members: Sequence[tuple[GemmDesc, TileConfig]],
+    spec: TPUSpec = DEFAULT_SPEC,
+) -> float:
+    G = len(members)
+    if G == 0:
+        return 0.0
+    share = spec.vmem_bytes // G
+    comps, mems, ramps, sers, wss = [], [], [], [], []
+    any_split = False
+    for d, t in members:
+        st = kernel_stats_ref(d, t, vmem_budget=share, spec=spec)
+        comps.append(st.flops / (spec.peak(d.dtype) * st.mxu_util))
+        mems.append(st.hbm_bytes / spec.hbm_bw)
+        ramps.append(spec.pipeline_fill_tiles
+                     * (st.hbm_bytes / st.n_tiles / spec.hbm_bw))
+        sers.append(max(comps[-1], mems[-1]))
+        wss.append(st.vmem_bytes)
+        any_split = any_split or st.splits > 1
+    pressure = sum(wss) / spec.vmem_bytes
+    overlap = min(1.0, 1.0 / pressure) if pressure > 0 else 1.0
+    ideal = max(sum(comps), sum(mems))
+    serial = sum(sers)
+    t_exec = overlap * ideal + (1.0 - overlap) * (
+        serial * (1.0 + 0.25 * max(0.0, pressure - 1.0))
+    )
+    launches = 2.0 if any_split else 1.0
+    return t_exec + max(ramps) + launches * spec.launch_overhead_s
+
+
+# ------------------------------------------------------------------ helpers
+def _cdiv(a, b):
     return -(-a // b)
 
 
-def _round_up(a: int, b: int) -> int:
+def _round_up(a, b):
     return _cdiv(a, b) * b
 
 
-def _align_eff(dim: int, mxu: int) -> float:
+def _align_eff(dim, mxu):
     return dim / (_cdiv(dim, mxu) * mxu)

@@ -5,12 +5,21 @@ library additionally returns, per concurrency degree, a pointer to the
 globally-optimized kernel (our TileConfig ↔ the paper's kernel object).
 JSON-persistent so the one-time tuning cost is amortized, exactly like a
 vendor BLAS tuning cache.
+
+The on-disk blob is versioned (``SCHEMA_VERSION``): v2 added the split-K
+axis to persisted tiles (4-element lists) and wrapped entries under a
+``{"schema": 2, "entries": ...}`` envelope.  Loading is backward
+compatible — a bare v1 blob parses, its 3-element tiles defaulting to
+``split_k = 1`` — but entries tuned under an *older schema's search
+space* are stale and would mis-plan, so they are discarded with a warning
+and re-tuned lazily instead of being trusted.
 """
 from __future__ import annotations
 
 import json
 import os
 import threading
+import warnings
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Dict, Optional, Sequence
@@ -20,13 +29,17 @@ from repro.core.gemm_desc import GemmDesc
 from repro.core.tuner import CDS, GOEntry, tune_gemm
 from repro.kernels.gemm.ops import TileConfig
 
+# Bump whenever the persisted format OR the tuning search space changes in
+# a way that invalidates stored entries (v2: split-K axis + bm 8-32 rows).
+SCHEMA_VERSION = 2
+
 
 def _tile_to_list(t: TileConfig) -> list[int]:
-    return [t.bm, t.bn, t.bk]
+    return [t.bm, t.bn, t.bk, t.split_k]
 
 
 def _tile_from_list(v) -> TileConfig:
-    return TileConfig(*v)
+    return TileConfig(*v)  # 3-element (v1) lists default split_k=1
 
 
 class GOLibrary:
@@ -41,6 +54,7 @@ class GOLibrary:
         self.spec = spec
         self._entries: Dict[str, GOEntry] = {}
         self._lock = threading.Lock()
+        self.loaded_schema: Optional[int] = None
         if self.path and self.path.exists():
             self.load(self.path)
 
@@ -62,15 +76,22 @@ class GOLibrary:
     def prewarm(self, descs: Sequence[GemmDesc]) -> int:
         """Tune ahead of traffic (DESIGN.md §10): the serving runtime calls
         this with the GEMMs a workload is about to issue so the one-time RC
-        tuning cost never lands on a live request.  Returns the number of
+        tuning cost never lands on a live request.  Missing entries are
+        tuned in ONE `tune_gemm_batch` sweep (the whole pool broadcasts
+        through the cost model, DESIGN.md §13).  Returns the number of
         newly tuned entries."""
-        fresh = 0
-        for d in descs:
+        from repro.core.tuner import tune_gemm_batch
+
+        with self._lock:
+            missing: Dict[str, GemmDesc] = {
+                d.key(): d for d in descs if d.key() not in self._entries
+            }
+        if missing:
+            entries = tune_gemm_batch(list(missing.values()), self.spec)
             with self._lock:
-                known = d.key() in self._entries
-            if not known:
-                self.get(d)
-                fresh += 1
+                for e in entries:
+                    self._entries.setdefault(e.desc_key, e)
+        fresh = len(missing)
         if fresh and self.path:
             self.save()
         return fresh
@@ -85,21 +106,43 @@ class GOLibrary:
     def save(self, path: str | os.PathLike | None = None) -> None:
         path = Path(path or self.path)
         blob = {
-            k: {
-                "isolated": _tile_to_list(e.isolated),
-                "go": {str(cd): _tile_to_list(t) for cd, t in e.go.items()},
-                "rc_source": e.rc_source,
-                "speedup": {str(cd): s for cd, s in e.speedup.items()},
-            }
-            for k, e in self._entries.items()
+            "schema": SCHEMA_VERSION,
+            "entries": {
+                k: {
+                    "isolated": _tile_to_list(e.isolated),
+                    "go": {str(cd): _tile_to_list(t) for cd, t in e.go.items()},
+                    "rc_source": e.rc_source,
+                    "speedup": {str(cd): s for cd, s in e.speedup.items()},
+                }
+                for k, e in self._entries.items()
+            },
         }
         tmp = path.with_suffix(".tmp")
         tmp.write_text(json.dumps(blob, indent=1))
         tmp.replace(path)
 
-    def load(self, path: str | os.PathLike) -> None:
+    def load(self, path: str | os.PathLike) -> int:
+        """Parse a v1 or v2 blob; returns the file's schema version.
+
+        Entries from a stale schema are *discarded* (they were tuned on an
+        older search space and would mis-plan, DESIGN.md §13) — the library
+        re-tunes lazily and the next `save` rewrites the file at the
+        current schema."""
         blob = json.loads(Path(path).read_text())
-        for k, v in blob.items():
+        if isinstance(blob, dict) and "schema" in blob:
+            schema, entries = int(blob["schema"]), blob["entries"]
+        else:
+            schema, entries = 1, blob           # bare v1 mapping
+        self.loaded_schema = schema
+        if schema < SCHEMA_VERSION:
+            warnings.warn(
+                f"GO library {path} has stale schema v{schema} (< "
+                f"v{SCHEMA_VERSION}); discarding {len(entries)} entries — "
+                "they will be re-tuned on the current search space.",
+                stacklevel=2,
+            )
+            return schema
+        for k, v in entries.items():
             self._entries[k] = GOEntry(
                 desc_key=k,
                 isolated=_tile_from_list(v["isolated"]),
@@ -107,6 +150,7 @@ class GOLibrary:
                 rc_source={int(c): s for c, s in v.get("rc_source", {}).items()},
                 speedup={int(c): s for c, s in v.get("speedup", {}).items()},
             )
+        return schema
 
 
 _DEFAULT: Optional[GOLibrary] = None

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import json
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Sequence
 
@@ -24,7 +24,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cost_model import DEFAULT_SPEC, TPUSpec, kernel_stats
+from repro.core.cost_model import (
+    DEFAULT_SPEC,
+    TileBatch,
+    TPUSpec,
+    kernel_stats_batch,
+)
 from repro.core.gemm_desc import GemmDesc
 from repro.core.library import GOLibrary
 from repro.core.tuner import CDS
@@ -36,18 +41,22 @@ def gemm_features(
     desc: GemmDesc, lib: GOLibrary, spec: TPUSpec = DEFAULT_SPEC
 ) -> np.ndarray:
     """Feature vector (3 + 3·|CDS| dims; 15 by default): log2(M,N,K) +
-    per-CD (log2 #WGs, occupancy, log2 #waves) — see DESIGN.md §4."""
+    per-CD (log2 #WGs, occupancy, log2 #waves) — see DESIGN.md §4.
+    All CDs' kernel stats come from ONE batched model call."""
     entry = lib.get(desc)
     feats = [math.log2(desc.M), math.log2(desc.N), math.log2(desc.K)]
-    for cd in CDS:
-        st = kernel_stats(
-            desc, entry.tile_for_cd(cd), vmem_budget=spec.vmem_bytes // cd,
-            spec=spec,
-        )
+    st = kernel_stats_batch(
+        desc,
+        TileBatch.from_tiles([entry.tile_for_cd(cd) for cd in CDS]),
+        vmem_budget=np.asarray([spec.vmem_bytes // cd for cd in CDS],
+                               np.int64),
+        spec=spec,
+    )
+    for i in range(len(CDS)):
         feats += [
-            math.log2(max(st.n_tiles, 1)),
-            st.occupancy,
-            math.log2(max(st.waves, 1e-6)),
+            math.log2(max(int(st.n_tiles[i]), 1)),
+            float(st.occupancy[i]),
+            math.log2(max(float(st.waves[i]), 1e-6)),
         ]
     return np.asarray(feats, np.float32)
 
@@ -57,6 +66,11 @@ class Predictor:
     W: np.ndarray          # (F+1, C)
     f_min: np.ndarray      # (F,)
     f_max: np.ndarray      # (F,)
+    # Memoized CD decisions (the O(µs) dispatch fast path, DESIGN.md §10):
+    # (desc key, availability class) → CD_exec.  Populated lazily; the
+    # features closure is only invoked on a miss, so steady-state dispatch
+    # performs zero cost-model evaluations.
+    _cd_cache: dict = field(default_factory=dict, repr=False, compare=False)
 
     # ---------------------------------------------------------------- api
     def _norm(self, X: np.ndarray) -> np.ndarray:
@@ -76,6 +90,27 @@ class Predictor:
         p = self.probabilities(X)
         cd = np.asarray(CLASSES)[p.argmax(-1)]
         return np.minimum(cd, _floor_class(available))
+
+    def predict_cd_one(self, key: str, features, available: int = 16) -> int:
+        """Memoized single-GEMM `predict_cd` — the dispatch fast path.
+
+        ``features`` is the feature vector OR a zero-arg callable
+        producing it; the callable is only invoked on a cache miss, so a
+        warm dispatch never touches the cost model.  Keyed on the
+        availability *class* (``_floor_class``), which is what the min
+        actually quantizes on."""
+        floor = _floor_class(available)
+        k = (key, floor)
+        hit = self._cd_cache.get(k)
+        if hit is not None:
+            return hit
+        x = features() if callable(features) else features
+        cd = int(self.predict_cd(np.atleast_2d(x), available=available)[0])
+        self._cd_cache[k] = cd
+        return cd
+
+    def invalidate_cache(self) -> None:
+        self._cd_cache.clear()
 
     # ------------------------------------------------------------ persist
     def save(self, path) -> None:

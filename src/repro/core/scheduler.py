@@ -26,6 +26,7 @@ while `execute()` is plan + execute in one call.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field, replace
 from typing import List, Optional, Sequence
 
@@ -85,13 +86,16 @@ def _compatible(a: GemmDesc, b: GemmDesc) -> bool:
     )
 
 
+@functools.lru_cache(maxsize=65536)
 def compat_key(d: GemmDesc) -> str:
     """Compatibility-class id: equal keys ⟺ plannable in one launch (§6.7).
 
     For plain GEMMs (batch == 1) equal keys coincide with `_compatible`.
     Batched GEMMs (§6.7 B-GEMM) class by their full key: they only pool
     with *identical* descriptors (the `same` branch of `plan_group`, which
-    `_compatible` deliberately excludes)."""
+    `_compatible` deliberately excludes).  Memoized (`GemmDesc` is frozen)
+    so admission-time classification is a dict probe — part of the
+    runtime's O(µs) dispatch path (DESIGN.md §10)."""
     if d.batch != 1:
         return d.key()
     return f"{d.N}_{d.K}_{int(d.ta)}{int(d.tb)}_{d.dtype}"
@@ -115,17 +119,45 @@ class ConcurrencyController:
         # go_tiles=False plans grouped launches with the isolated-tuned tile
         # (the paper's "default" baseline; used by benchmark baselines).
         self.go_tiles = go_tiles
+        # Dispatch-path memos (DESIGN.md §10): CD decisions and feature
+        # vectors per desc key.  MUST be invalidated when `lib`/`spec` are
+        # swapped (Runtime.set_mesh does) — stale CDs would mis-plan.
+        self._cd_cache: dict = {}
+        self._feat_cache: dict = {}
+
+    def invalidate_caches(self) -> None:
+        """Drop memoized CD decisions / features (call after swapping the
+        library, spec, or predictor — e.g. on mesh derating)."""
+        self._cd_cache.clear()
+        self._feat_cache.clear()
+        if self.predictor is not None:
+            self.predictor.invalidate_cache()
 
     # ------------------------------------------------------------ predict
+    def _features(self, desc: GemmDesc):
+        key = desc.key()
+        x = self._feat_cache.get(key)
+        if x is None:
+            x = gemm_features(desc, self.lib, self.spec)
+            self._feat_cache[key] = x
+        return x
+
     def preferred_cd(self, desc: GemmDesc, available: int) -> int:
         if available <= 1:
             return 1
+        floor = max(c for c in CLASSES if c <= available)
+        ck = (desc.key(), floor)
+        cached = self._cd_cache.get(ck)
+        if cached is not None:
+            return cached
         if self.predictor is not None:
-            x = gemm_features(desc, self.lib, self.spec)
-            return int(self.predictor.predict_cd(x, available=available)[0])
-        # Oracle fallback: modeled preferred CD from the GO library.
-        cd = self.lib.get(desc).preferred_cd()
-        return min(cd, max(c for c in CLASSES if c <= max(available, 1)))
+            cd = self.predictor.predict_cd_one(
+                desc.key(), lambda: self._features(desc), available)
+        else:
+            # Oracle fallback: modeled preferred CD from the GO library.
+            cd = min(self.lib.get(desc).preferred_cd(), floor)
+        self._cd_cache[ck] = cd
+        return cd
 
     # --------------------------------------------------------------- plan
     def plan_group(

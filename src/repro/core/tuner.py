@@ -9,32 +9,74 @@ Faithful pipeline:
 "Benchmark" = calibrated cost model (CPU-only container); the search space
 is the real Pallas TileConfig space, so on a TPU the same code re-tunes from
 wall-clock by swapping `evaluate`.
+
+Both steps run as **batched NumPy sweeps** (DESIGN.md §13): step ① is one
+`isolated_time_batch` over the full (tile × split-K) grid per RC fraction,
+step ② one `group_time_batch` over (RC winner × split-K) × CD.  The
+pre-vectorization scalar loops survive as `tune_gemm_reference` — the
+parity oracle and the wall-clock baseline for `benchmarks/tuning.py`.
+
+The search space covers decode-friendly ``bm ∈ {8, 16, 32}`` rows and the
+**split-K** axis (`TileConfig.split_k`, DESIGN.md §13): for skinny GEMMs
+whose (m, n) grid collapses to one tile, splitting the K sweep is the only
+way to add parallel tiles, trading a small partial-C round-trip for an
+``s×`` smaller fill/drain ramp.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, Sequence
+
+import numpy as np
 
 from repro.core.cost_model import (
     DEFAULT_SPEC,
     RC_FRACTIONS,
+    DescBatch,
+    TileBatch,
     TPUSpec,
-    group_time,
+    group_time_batch,
+    group_time_ref,
     isolated_time,
+    isolated_time_batch,
+    isolated_time_ref,
     kernel_stats,
+    tile_precompute,
 )
 from repro.core.gemm_desc import GemmDesc
 from repro.kernels.gemm.ops import TileConfig
 
 CDS = (2, 4, 8, 16)
 
-# The kernel-implementation search space (BlockSpec tilings).
+# The kernel-implementation search space (BlockSpec tilings).  bm rows 8-32
+# are the decode-friendly additions: for M ≤ mxu they cost nothing (padded
+# FLOPs and alignment cancel) but shrink the accumulator working set.
 CANDIDATE_TILES: tuple[TileConfig, ...] = tuple(
+    TileConfig(bm, bn, bk)
+    for bm in (8, 16, 32, 64, 128, 256, 512)
+    for bn in (128, 256, 512)
+    for bk in (128, 256, 512)
+)
+
+# Split-K decomposition axis (DESIGN.md §13); 1 first so argmin tie-breaks
+# keep the un-split kernel.  Split-K enters at Step ② only: it is a
+# GO-time decision (recovering occupancy under a CD's resource share, the
+# Stream-K mechanism) — letting it into Step ① would crowd the RC-winner
+# slots out of the fat-bn tiles grouped execution needs.
+SPLIT_K_CANDIDATES: tuple[int, ...] = (1, 2, 4, 8)
+
+# The pre-split-K space of the original scalar tuner — kept for the
+# equal-search-space comparison in benchmarks/tuning.py.
+LEGACY_CANDIDATE_TILES: tuple[TileConfig, ...] = tuple(
     TileConfig(bm, bn, bk)
     for bm in (64, 128, 256, 512)
     for bn in (128, 256, 512)
     for bk in (128, 256, 512)
 )
+
+FALLBACK_TILE = TileConfig(128, 128, 128)
+
+_SEARCH = TileBatch.from_tiles(CANDIDATE_TILES)
 
 
 @dataclass
@@ -48,10 +90,16 @@ class GOEntry:
     speedup: Dict[int, float] = field(default_factory=dict)  # CD -> modeled
 
     def tile_for_cd(self, cd: int) -> TileConfig:
-        if cd <= 1:
+        """GO tile for the largest tuned CD ≤ ``cd``; a ``cd`` below the
+        smallest tuned CD falls *forward* to the nearest tuned CD (its GO
+        tile was picked under the closest resource share — the isolated
+        tile was picked under a full-chip budget and would mis-plan)."""
+        if cd <= 1 or not self.go:
             return self.isolated
         key = max((c for c in self.go if c <= cd), default=None)
-        return self.go[key] if key is not None else self.isolated
+        if key is None:
+            key = min(self.go)
+        return self.go[key]
 
     def preferred_cd(self, threshold: float = 1.05) -> int:
         """Paper Fig. 7b: CD with max speedup over serial; <5% ⇒ sequential."""
@@ -63,39 +111,197 @@ class GOEntry:
 
 
 def tune_rc(
-    desc: GemmDesc, frac: float, spec: TPUSpec = DEFAULT_SPEC
+    desc: GemmDesc, frac: float, spec: TPUSpec = DEFAULT_SPEC,
+    search: TileBatch | None = None,
 ) -> TileConfig:
     """Step ①: best tile under a resource-constrained configuration."""
+    search = search if search is not None else _SEARCH
     budget = int(spec.vmem_bytes * frac)
-    feasible = [
-        t
-        for t in CANDIDATE_TILES
-        if t.vmem_bytes(desc.in_bytes) <= budget
-    ] or [TileConfig(128, 128, 128)]
-    return min(
-        feasible,
-        key=lambda t: isolated_time(
-            desc, t, spec, vmem_budget=budget, bw_frac=frac
-        ),
+    ws_raw = search.vmem_bytes(desc.in_bytes)
+    feasible = ws_raw <= budget
+    if not feasible.any():
+        return FALLBACK_TILE
+    times = isolated_time_batch(
+        desc, search, spec, vmem_budget=budget, bw_frac=frac)
+    return search.tile(int(np.where(feasible, times, np.inf).argmin()))
+
+
+def tune_gemm_batch(
+    descs: Sequence[GemmDesc],
+    spec: TPUSpec = DEFAULT_SPEC,
+    cds: Sequence[int] = CDS,
+    tiles: Sequence[TileConfig] | None = None,
+    split_ks: Sequence[int] | None = None,
+    chunk: int = 512,
+) -> list[GOEntry]:
+    """Vectorized Step ① + Step ② for a whole *pool* of GEMMs.
+
+    Everything broadcasts: Step ① is ONE model evaluation of shape
+    ``(RC fractions × descs × tiles)``, Step ② ONE of
+    ``(CDs × descs × RC·split-K candidates)`` — this is where batching
+    pays: NumPy dispatch overhead amortizes across the pool, so per-GEMM
+    tuning cost collapses to array throughput (`benchmarks/tuning.py`
+    measures the ratio vs the scalar sweep).  Entries are bitwise
+    identical to per-GEMM `tune_gemm` / `tune_gemm_reference` results on
+    the same search space.
+    """
+    descs = list(descs)
+    if not descs:
+        return []
+    if len(descs) > chunk:                  # bound peak sweep memory
+        out: list[GOEntry] = []
+        for i in range(0, len(descs), chunk):
+            out += tune_gemm_batch(descs[i:i + chunk], spec, cds, tiles,
+                                   split_ks, chunk)
+        return out
+    search = _SEARCH if tiles is None else TileBatch.from_tiles(tiles)
+    split_ks = tuple(split_ks) if split_ks is not None else SPLIT_K_CANDIDATES
+    cds = tuple(int(c) for c in cds)
+    names = list(RC_FRACTIONS)
+    fracs = np.asarray([RC_FRACTIONS[n] for n in names], np.float64)
+    budgets = (spec.vmem_bytes * fracs).astype(np.int64)     # int() truncation
+
+    db = DescBatch.from_descs(descs)
+    d2 = DescBatch(**{k: getattr(db, k)[:, None] for k in
+                      ("M", "N", "K", "batch", "in_bytes", "ta", "tb", "f32")})
+    S = len(split_ks)
+
+    # Step ①: (RC, desc, tile) sweep in one evaluation.
+    pre = tile_precompute(d2, search, spec)
+    times = isolated_time_batch(
+        d2, search, spec, vmem_budget=budgets[:, None, None],
+        bw_frac=fracs[:, None, None], pre=pre,
     )
+    ws_raw = search.vmem_bytes(d2.in_bytes)                  # (D, T)
+    times = np.where(ws_raw <= budgets[:, None, None], times, np.inf)
+    idx = times.argmin(-1)                                   # (RC, D)
+    min_t = np.take_along_axis(times, idx[..., None], -1)[..., 0]
+    if np.isinf(min_t).any():
+        # A fraction with no feasible tile (tiny scaled specs): those
+        # descs take the FALLBACK_TILE path per-GEMM — rare by design.
+        bad = np.isinf(min_t).any(0)
+        good = [d for i, d in enumerate(descs) if not bad[i]]
+        fixed = {d.key(): _tune_gemm_infeasible(d, spec, cds, search,
+                                                split_ks)
+                 for i, d in enumerate(descs) if bad[i]}
+        good_entries = iter(tune_gemm_batch(good, spec, cds, tiles, split_ks))
+        return [fixed.get(d.key()) or next(good_entries) for d in descs]
+    seq_1 = min_t[0]                                         # (D,)
+    wbm, wbn, wbk = search.bm[idx], search.bn[idx], search.bk[idx]  # (RC, D)
+
+    # Step ②: (CD, desc, RC winner × split-K) sweep in one evaluation —
+    # split-K is a GO-time decision: the best decomposition under a CD's
+    # resource share can differ from the isolated one.  Duplicate winner
+    # tiles keep their first RC name via the argmin tie-break, matching
+    # the scalar sweep's strict-less comparison.
+    cand_bm = np.repeat(wbm.T, S, axis=1)                    # (D, RC·S)
+    cand_bn = np.repeat(wbn.T, S, axis=1)
+    cand_bk = np.repeat(wbk.T, S, axis=1)
+    cand_split = np.tile(np.asarray(split_ks, np.int64), len(names))
+    tb2 = TileBatch(bm=cand_bm, bn=cand_bn, bk=cand_bk, split_k=cand_split)
+    gt = group_time_batch(d2, tb2, cds, spec)                # (CD, D, RC·S)
+    jj = gt.argmin(-1)                                       # (CD, D)
+    best = np.take_along_axis(gt, jj[..., None], -1)[..., 0]
+
+    entries: list[GOEntry] = []
+    for i, d in enumerate(descs):
+        e = GOEntry(
+            desc_key=d.key(),
+            isolated=TileConfig(int(wbm[0, i]), int(wbn[0, i]),
+                                int(wbk[0, i])),
+        )
+        for ci, cd in enumerate(cds):
+            j = int(jj[ci, i])
+            e.go[cd] = TileConfig(int(cand_bm[i, j]), int(cand_bn[i, j]),
+                                  int(cand_bk[i, j]), int(cand_split[j]))
+            e.rc_source[cd] = names[j // S]
+            e.speedup[cd] = (float(seq_1[i]) * cd) / float(best[ci, i])
+        entries.append(e)
+    return entries
+
+
+def _tune_gemm_infeasible(
+    desc: GemmDesc, spec: TPUSpec, cds: Sequence[int], search: TileBatch,
+    split_ks: Sequence[int],
+) -> GOEntry:
+    """Per-GEMM path for descs where some RC fraction has no feasible
+    tile: `tune_rc` substitutes FALLBACK_TILE exactly like the scalar
+    sweep's ``or [FALLBACK_TILE]``."""
+    winners = {name: tune_rc(desc, frac, spec, search)
+               for name, frac in RC_FRACTIONS.items()}
+    entry = GOEntry(desc_key=desc.key(), isolated=winners["GPU"])
+    seq_1 = isolated_time(desc, entry.isolated, spec)
+    cand = [(name, replace(t, split_k=s))
+            for name, t in winners.items() for s in split_ks]
+    times = group_time_batch(
+        desc, TileBatch.from_tiles([t for _, t in cand]), cds, spec)
+    for row, cd in zip(times, cds):
+        j = int(row.argmin())
+        entry.go[cd] = cand[j][1]
+        entry.rc_source[cd] = cand[j][0]
+        entry.speedup[cd] = (seq_1 * cd) / float(row[j])
+    return entry
 
 
 def tune_gemm(
     desc: GemmDesc,
     spec: TPUSpec = DEFAULT_SPEC,
     cds: Sequence[int] = CDS,
+    tiles: Sequence[TileConfig] | None = None,
+    split_ks: Sequence[int] | None = None,
 ) -> GOEntry:
-    # Step ①: per-RC winners.
-    rc_winners = {name: tune_rc(desc, frac, spec) for name, frac in RC_FRACTIONS.items()}
+    """Vectorized Step ① + Step ② for one GEMM.  ``tiles``/``split_ks``
+    override the search space (benchmarks replay the legacy space)."""
+    return tune_gemm_batch([desc], spec, cds, tiles, split_ks)[0]
+
+
+# ----------------------------------------------------- scalar reference
+def tune_rc_reference(
+    desc: GemmDesc, frac: float, spec: TPUSpec = DEFAULT_SPEC,
+    tiles: Sequence[TileConfig] = LEGACY_CANDIDATE_TILES,
+) -> TileConfig:
+    """The pre-vectorization Step ① — nested Python loops over scalar
+    cost-model calls.  Parity oracle + `benchmarks/tuning.py` baseline.
+    Split-K is a Step ② axis, so ``tiles`` here are un-split configs."""
+    budget = int(spec.vmem_bytes * frac)
+    feasible = [
+        t for t in tiles if t.vmem_bytes(desc.in_bytes) <= budget
+    ] or [FALLBACK_TILE]
+    return min(
+        feasible,
+        key=lambda t: isolated_time_ref(
+            desc, t, spec, vmem_budget=budget, bw_frac=frac
+        ),
+    )
+
+
+def tune_gemm_reference(
+    desc: GemmDesc,
+    spec: TPUSpec = DEFAULT_SPEC,
+    cds: Sequence[int] = CDS,
+    tiles: Sequence[TileConfig] = LEGACY_CANDIDATE_TILES,
+    split_ks: Sequence[int] = (1,),
+) -> GOEntry:
+    """The pre-vectorization tuner: one scalar cost-model call per
+    (tile, RC, CD) tuple.  Produces bitwise-identical entries to
+    `tune_gemm` on the same search space."""
+    rc_winners = {
+        name: tune_rc_reference(desc, frac, spec, tiles=tiles)
+        for name, frac in RC_FRACTIONS.items()
+    }
     isolated = rc_winners["GPU"]
     entry = GOEntry(desc_key=desc.key(), isolated=isolated)
 
-    # Step ②: grouped evaluation of the RC winners at each CD.
-    seq_1 = isolated_time(desc, isolated, spec)
+    seq_1 = isolated_time_ref(desc, isolated, spec)
+    cand = [
+        (name, replace(t, split_k=s))
+        for name, t in rc_winners.items()
+        for s in split_ks
+    ]
     for cd in cds:
         best_name, best_tile, best_t = None, None, float("inf")
-        for name, tile in rc_winners.items():
-            t = group_time([(desc, tile)] * cd, spec)
+        for name, tile in cand:
+            t = group_time_ref([(desc, tile)] * cd, spec)
             if t < best_t:
                 best_name, best_tile, best_t = name, tile, t
         entry.go[cd] = best_tile

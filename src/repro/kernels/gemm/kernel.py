@@ -8,6 +8,14 @@ are *this same kernel* instantiated with different TileConfigs.
 
 Grid = (m_tiles, n_tiles, k_tiles); k is the innermost, sequential
 ("arbitrary") dimension accumulating into an f32 VMEM scratch tile.
+
+**Split-K** (``split_k > 1``, DESIGN.md §13): the K sweep is partitioned
+into ``split_k`` contiguous slices, grid = (split, m, n, k/split).  Each
+slice accumulates its own f32 *partial* C block into a (split, M, N)
+scratch output, and a second pallas kernel — the reduce epilogue — sums
+the partials and casts to the output dtype.  This multiplies the number
+of parallel grid tiles by ``split_k``, recovering pipeline occupancy for
+skinny GEMMs whose (m, n) grid is a single tile.
 """
 from __future__ import annotations
 
@@ -41,6 +49,31 @@ def _matmul_kernel(a_ref, b_ref, c_ref, acc_ref, *, n_k: int, ta: bool, tb: bool
         c_ref[...] = acc_ref[...].astype(c_ref.dtype)
 
 
+def _matmul_splitk_kernel(a_ref, b_ref, p_ref, acc_ref, *, n_ks: int,
+                          ta: bool, tb: bool):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    if ta:
+        a = a.T  # stored (bk, bm) -> (bm, bk)
+    if tb:
+        b = b.T  # stored (bn, bk) -> (bk, bn)
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_ks - 1)
+    def _done():
+        p_ref[...] = acc_ref[...][None]  # f32 partial for this K slice
+
+
+def _reduce_kernel(p_ref, o_ref):
+    o_ref[...] = p_ref[...].sum(axis=0).astype(o_ref.dtype)
+
+
 def matmul_pallas(
     a: jax.Array,
     b: jax.Array,
@@ -51,13 +84,16 @@ def matmul_pallas(
     bn: int,
     bk: int,
     out_dtype,
+    split_k: int = 1,
     interpret: bool = False,
 ):
     """C[M,N] = op(a) @ op(b).
 
     Storage shapes: ``a`` is (M,K), or (K,M) when ``ta``; ``b`` is (K,N), or
     (N,K) when ``tb`` (the paper's default B layout).  All dims must already
-    be padded to tile multiples (ops.py does this).
+    be padded to tile multiples (ops.py does this); for ``split_k > 1`` the
+    K dim must be padded to a ``bk * split_k`` multiple so every K slice
+    sweeps the same number of k tiles.
     """
     if ta:
         K, M = a.shape
@@ -70,6 +106,49 @@ def matmul_pallas(
     assert K == Kb, (a.shape, b.shape, ta, tb)
     assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
     n_m, n_n, n_k = M // bm, N // bn, K // bk
+
+    if split_k > 1:
+        assert n_k % split_k == 0, (n_k, split_k)
+        n_ks = n_k // split_k
+        a_spec = (
+            pl.BlockSpec((bk, bm), lambda s, i, j, k: (s * n_ks + k, i))
+            if ta
+            else pl.BlockSpec((bm, bk), lambda s, i, j, k: (i, s * n_ks + k))
+        )
+        b_spec = (
+            pl.BlockSpec((bn, bk), lambda s, i, j, k: (j, s * n_ks + k))
+            if tb
+            else pl.BlockSpec((bk, bn), lambda s, i, j, k: (s * n_ks + k, j))
+        )
+        kernel = functools.partial(_matmul_splitk_kernel, n_ks=n_ks,
+                                   ta=ta, tb=tb)
+        partials = pl.pallas_call(
+            kernel,
+            grid=(split_k, n_m, n_n, n_ks),
+            in_specs=[a_spec, b_spec],
+            out_specs=pl.BlockSpec((1, bm, bn), lambda s, i, j, k: (s, i, j)),
+            out_shape=jax.ShapeDtypeStruct((split_k, M, N), jnp.float32),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=(
+                    "arbitrary", "parallel", "parallel", "arbitrary"),
+            ),
+            interpret=interpret,
+            name=f"goldyloc_gemm_{bm}x{bn}x{bk}s{split_k}",
+        )(a, b)
+        # Reduce epilogue: sum the f32 partials, cast to the output dtype.
+        return pl.pallas_call(
+            _reduce_kernel,
+            grid=(n_m, n_n),
+            in_specs=[pl.BlockSpec((split_k, bm, bn), lambda i, j: (0, i, j))],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("parallel", "parallel"),
+            ),
+            interpret=interpret,
+            name=f"goldyloc_gemm_reduce_{bm}x{bn}s{split_k}",
+        )(partials)
 
     a_spec = (
         pl.BlockSpec((bk, bm), lambda i, j, k: (k, i))

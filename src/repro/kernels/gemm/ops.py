@@ -19,21 +19,32 @@ from repro.kernels.gemm.ref import gemm_ref
 
 @dataclass(frozen=True, order=True)
 class TileConfig:
-    """BlockSpec tiling — the tunable kernel 'implementation' of the paper."""
+    """BlockSpec tiling — the tunable kernel 'implementation' of the paper.
+
+    ``split_k > 1`` partitions the sequential K sweep into that many
+    independent grid slices, each accumulating an f32 partial C that a
+    reduce epilogue sums (DESIGN.md §13) — the Stream-K-style decomposition
+    axis that recovers pipeline occupancy for skinny/decode GEMMs.
+    """
 
     bm: int = 256
     bn: int = 256
     bk: int = 256
+    split_k: int = 1
 
     def vmem_bytes(self, in_bytes: int = 2, acc_bytes: int = 4) -> int:
-        """Working set: double-buffered A/B tiles + f32 accumulator + C out."""
+        """Working set: double-buffered A/B tiles + f32 accumulator + C out.
+
+        Per-slice working set is independent of ``split_k``: each slice
+        holds the same tile buffers, and partials live in HBM."""
         ab = 2 * (self.bm * self.bk + self.bk * self.bn) * in_bytes
         acc = self.bm * self.bn * acc_bytes
         out = self.bm * self.bn * in_bytes
         return ab + acc + out
 
     def key(self) -> str:
-        return f"{self.bm}x{self.bn}x{self.bk}"
+        base = f"{self.bm}x{self.bn}x{self.bk}"
+        return base if self.split_k == 1 else f"{base}s{self.split_k}"
 
 
 def _pad_to(x: jax.Array, multiples: tuple[int, int]) -> jax.Array:
@@ -49,8 +60,13 @@ def _gemm(a, b, ta, tb, tile, out_dtype, interpret, force_ref):
         return gemm_ref(a, b, ta=ta, tb=tb, out_dtype=out_dtype)
     M = a.shape[1] if ta else a.shape[0]
     N = b.shape[0] if tb else b.shape[1]
-    a_p = _pad_to(a, (tile.bk, tile.bm) if ta else (tile.bm, tile.bk))
-    b_p = _pad_to(b, (tile.bn, tile.bk) if tb else (tile.bk, tile.bn))
+    K = a.shape[0] if ta else a.shape[1]
+    # Effective split: never more slices than k tiles; zero-pad K to a
+    # (bk · split) multiple so every slice sweeps equally many k tiles.
+    split = max(1, min(tile.split_k, -(-K // tile.bk)))
+    k_mult = tile.bk * split
+    a_p = _pad_to(a, (k_mult, tile.bm) if ta else (tile.bm, k_mult))
+    b_p = _pad_to(b, (tile.bn, k_mult) if tb else (k_mult, tile.bn))
     out = matmul_pallas(
         a_p,
         b_p,
@@ -59,6 +75,7 @@ def _gemm(a, b, ta, tb, tile, out_dtype, interpret, force_ref):
         bm=tile.bm,
         bn=tile.bn,
         bk=tile.bk,
+        split_k=split,
         out_dtype=out_dtype,
         interpret=interpret,
     )

@@ -7,11 +7,18 @@ This module is the missing online layer:
 
 - `submit()` admits `GemmRequest`s (tagged with a tenant/stream id) into
   **per-compatibility-class queues** (`core.scheduler.compat_key`, §6.7).
+  Admission does the per-ticket work ONCE: the class key is a memoized
+  lookup and the ticket is bisect-inserted at its canonical position, so
+  each class queue maintains its plan-cache signature incrementally.
 - `flush()` runs the lightweight dynamic logic on the queue heads exactly
   as the paper's CP does — ``CD_exec = min(CD_predicted, available)`` —
   but through a **plan cache** keyed by the queue signature (canonically
   sorted desc keys + available slots), so steady-state traffic skips
   re-planning and re-tuning entirely and `CP_OVERHEAD_S` is amortized.
+  A cache-hit flush performs **zero cost-model evaluations and zero
+  signature re-sorts** (asserted by telemetry counters and
+  `benchmarks/tuning.py`) — this is what makes the dynamic logic
+  "lightweight" in the paper's CP-resident sense (DESIGN.md §13).
 - launches are interleaved **round-robin across compatibility classes**,
   so one tenant's large GEMMs cannot starve another tenant's small ones.
 - `drain()` force-flushes until the queues are empty.
@@ -24,11 +31,13 @@ real pallas kernels (`ConcurrencyController.execute_plan`).
 """
 from __future__ import annotations
 
+import bisect
 import time
-from collections import OrderedDict, deque
+from collections import OrderedDict
 from dataclasses import dataclass, replace
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core.cost_model import EVAL_COUNTER
 from repro.core.gemm_desc import GemmDesc
 from repro.core.scheduler import (
     CP_OVERHEAD_S,
@@ -84,6 +93,43 @@ class Launch:
     end_t: float = 0.0
 
 
+class _ClassQueue:
+    """One compatibility class's pending tickets, kept in canonical order
+    *at admission* (bisect insertion on the `_canonical_order` tuple, ties
+    resolved by arrival like the old per-flush stable sort).
+
+    The plan-cache signature key list is maintained incrementally as a
+    parallel array, so `flush()` never sorts and never rebuilds the
+    canonical order — the structural half of the O(µs) fast path."""
+
+    __slots__ = ("tickets", "keys", "_orders", "oldest_t")
+
+    def __init__(self) -> None:
+        self.tickets: List[Ticket] = []
+        self.keys: List[str] = []          # desc keys, canonical order
+        self._orders: List[tuple] = []     # bisect keys (no key= needed)
+        self.oldest_t = float("inf")       # earliest pending submit time
+
+    def add(self, ticket: Ticket) -> None:
+        order = _canonical_order(ticket.desc)
+        i = bisect.bisect_right(self._orders, order)
+        self._orders.insert(i, order)
+        self.tickets.insert(i, ticket)
+        self.keys.insert(i, ticket.desc.key())
+        if ticket.submit_t < self.oldest_t:
+            self.oldest_t = ticket.submit_t
+
+    def take_all(self) -> tuple[List[Ticket], tuple]:
+        """Pop every ticket (already canonically sorted) + signature keys."""
+        tickets, keys = self.tickets, tuple(self.keys)
+        self.tickets, self.keys, self._orders = [], [], []
+        self.oldest_t = float("inf")
+        return tickets, keys
+
+    def __len__(self) -> int:
+        return len(self.tickets)
+
+
 class Runtime:
     def __init__(
         self,
@@ -102,7 +148,7 @@ class Runtime:
         self._chip_lib = self.ctrl.lib
         self.mesh_resources = None
         self.device_free_t = 0.0
-        self._queues: Dict[str, Deque[Ticket]] = {}
+        self._queues: Dict[str, _ClassQueue] = {}
         self._rr: int = 0               # round-robin cursor over class order
         self._order: List[str] = []     # class keys in first-seen order
         self._plan_cache: "OrderedDict[Signature, Schedule]" = OrderedDict()
@@ -122,11 +168,12 @@ class Runtime:
         self._seq += 1
         ticket = Ticket(seq=self._seq, tenant=tenant, request=request,
                         submit_t=now)
-        key = compat_key(request.desc)
-        if key not in self._queues:
-            self._queues[key] = deque()
+        key = compat_key(request.desc)          # memoized classification
+        q = self._queues.get(key)
+        if q is None:
+            q = self._queues[key] = _ClassQueue()
             self._order.append(key)
-        self._queues[key].append(ticket)
+        q.add(ticket)                           # canonical-position insert
         self.telemetry.record_submit()
         return ticket
 
@@ -158,6 +205,9 @@ class Runtime:
         self.ctrl.lib = (
             self._chip_lib if res.frac == 1.0 else GOLibrary(spec=res.spec)
         )
+        # The controller's memoized CD/feature decisions were derived from
+        # the previous spec+library — stale under the derated share.
+        self.ctrl.invalidate_caches()
         self.set_available(res.slot_budget)
         self.invalidate_plans()
         self.mesh_resources = res
@@ -182,7 +232,7 @@ class Runtime:
         if plan and descs:
             for key in {compat_key(d) for d in descs}:
                 members = [d for d in descs if compat_key(d) == key]
-                _, hit = self._plan_for(sorted(members, key=_canonical_order))
+                _, hit = self._plan_for(self._canonical_sort(members))
                 if not hit:
                     self.telemetry.record_prewarm_plan(CP_OVERHEAD_S)
         return fresh
@@ -200,10 +250,12 @@ class Runtime:
         groups are interleaved round-robin into the launch order.
         """
         now = self.clock() if now is None else now
+        evals0 = EVAL_COUNTER.evals
+        resorts0 = self.telemetry.sig_resorts
         ripe = [
             k for k in self._order
             if self._queues.get(k)
-            and (force or now - self._queues[k][0].submit_t >= self.config.window_s)
+            and (force or now - self._queues[k].oldest_t >= self.config.window_s)
         ]
         if not ripe:
             return []
@@ -218,9 +270,13 @@ class Runtime:
         per_class: List[List[Launch]] = []
         planning_s = 0.0
         for key in rotated:
-            tickets = sorted(self._queues[key], key=lambda t: _canonical_order(t.desc))
-            self._queues[key].clear()
-            sched, hit = self._plan_for([t.desc for t in tickets])
+            # Tickets come back already canonically ordered and the
+            # signature keys are maintained incrementally — no sort, no
+            # per-flush signature rebuild (telemetry.sig_resorts counts
+            # any future regression to a full re-sort).
+            tickets, sig_keys = self._queues[key].take_all()
+            sched, hit = self._plan_for_keys(
+                sig_keys, lambda: [t.desc for t in tickets])
             self.telemetry.record_plan(hit, CP_OVERHEAD_S)
             if not hit:
                 planning_s += CP_OVERHEAD_S
@@ -261,6 +317,10 @@ class Runtime:
                 cache_hit=launch.cache_hit,
             ))
         self.device_free_t = t
+        self.telemetry.record_flush_fastpath(
+            EVAL_COUNTER.evals - evals0,
+            self.telemetry.sig_resorts - resorts0,
+        )
         return launches
 
     def drain(self, now: float | None = None) -> List[Launch]:
@@ -271,17 +331,34 @@ class Runtime:
         return out
 
     # ---------------------------------------------------------- internals
-    def _plan_for(self, descs: Sequence[GemmDesc]) -> tuple[Schedule, bool]:
-        sig: Signature = (tuple(d.key() for d in descs), self.available)
+    def _plan_for_keys(self, keys: tuple, descs_fn) -> tuple[Schedule, bool]:
+        """Plan-cache probe on a prebuilt canonical key tuple; ``descs_fn``
+        materializes the descriptors only on a miss, so a hit touches
+        neither the planner nor the cost model."""
+        sig: Signature = (keys, self.available)
         cached = self._plan_cache.get(sig)
         if cached is not None:
             self._plan_cache.move_to_end(sig)
             return cached, True
-        sched = self.ctrl.plan(descs, available=self.available)
+        sched = self.ctrl.plan(descs_fn(), available=self.available)
         self._plan_cache[sig] = sched
         while len(self._plan_cache) > self.config.plan_cache_capacity:
             self._plan_cache.popitem(last=False)
         return sched, False
+
+    def _canonical_sort(self, descs: Sequence[GemmDesc]) -> List[GemmDesc]:
+        """Full canonical-order sort of an arbitrary desc list — the slow
+        path for planning entries that did NOT come through an
+        admission-sorted class queue (offline prewarm today).  Every use
+        is metered: flush() asserts its own delta stays zero."""
+        self.telemetry.record_sig_resort()
+        return sorted(descs, key=_canonical_order)
+
+    def _plan_for(self, descs: Sequence[GemmDesc]) -> tuple[Schedule, bool]:
+        """Plan a desc list already in canonical order (`_canonical_sort`
+        for arbitrary lists)."""
+        return self._plan_for_keys(
+            tuple(d.key() for d in descs), lambda: descs)
 
     def _execute(self, launch: Launch) -> Optional[float]:
         reqs = [t.request for t in launch.tickets]

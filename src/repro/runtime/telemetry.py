@@ -50,6 +50,18 @@ class Telemetry:
     depth_hist: Counter = field(default_factory=Counter)
     cp_overhead_paid_s: float = 0.0
     cp_overhead_saved_s: float = 0.0
+    # Dispatch fast-path counters (DESIGN.md §10/§13).  `sig_resorts`
+    # counts every full canonical-signature sort (the runtime's
+    # `_canonical_sort` — today only offline prewarm planning pays one);
+    # `flush_sig_resorts` / `flush_evals` are the portions attributable
+    # to flush() itself, which must both stay ZERO on the fast path —
+    # the admission-sorted queues make a flush-path sort structurally
+    # unnecessary, and these deltas catch any regression that
+    # reintroduces one.
+    flush_evals: int = 0
+    last_flush_evals: int = 0
+    sig_resorts: int = 0
+    flush_sig_resorts: int = 0
 
     # ------------------------------------------------------------- record
     def record_submit(self, n: int = 1) -> None:
@@ -67,6 +79,18 @@ class Telemetry:
         else:
             self.cache_misses += 1
             self.cp_overhead_paid_s += overhead_s
+
+    def record_sig_resort(self, n: int = 1) -> None:
+        """A full canonical-signature sort was performed (offline prewarm
+        planning today; anything on the flush path is a regression)."""
+        self.sig_resorts += n
+
+    def record_flush_fastpath(self, evals: int, resorts: int) -> None:
+        """Cost-model evaluations / signature re-sorts attributable to
+        one flush()."""
+        self.last_flush_evals = evals
+        self.flush_evals += evals
+        self.flush_sig_resorts += resorts
 
     def record_prewarm_plan(self, overhead_s: float) -> None:
         """Offline (pre-traffic) plan derivation: paid, but not an online
@@ -125,6 +149,9 @@ class Telemetry:
             "max_cd": self.max_cd(),
             "modes": self.mode_counts(),
             "plan_cache_hit_rate": round(self.cache_hit_rate(), 4),
+            "flush_evals": self.flush_evals,
+            "sig_resorts": self.sig_resorts,
+            "flush_sig_resorts": self.flush_sig_resorts,
             "prewarmed_plans": self.prewarmed_plans,
             "cp_overhead_paid_us": round(self.cp_overhead_paid_s * 1e6, 2),
             "cp_overhead_saved_us": round(self.cp_overhead_saved_s * 1e6, 2),

@@ -1,5 +1,8 @@
 """RC tuner + GO library behaviour (paper §4.2, Fig. 11)."""
+import json
+
 import numpy as np
+import pytest
 
 from repro.core import (
     DEFAULT_SPEC,
@@ -9,7 +12,16 @@ from repro.core import (
     go_kernel_properties,
     tune_gemm,
 )
-from repro.core.tuner import CANDIDATE_TILES, CDS, tune_rc
+from repro.core.cost_model import group_time
+from repro.core.library import SCHEMA_VERSION
+from repro.core.tuner import (
+    CANDIDATE_TILES,
+    CDS,
+    GOEntry,
+    tune_gemm_batch,
+    tune_rc,
+)
+from repro.kernels.gemm.ops import TileConfig
 
 
 def test_entry_fully_populated():
@@ -60,3 +72,95 @@ def test_library_roundtrip(tmp_path):
     e2 = lib2.get(d)
     assert e2.isolated == e.isolated and e2.go == e.go
     assert abs(e2.speedup[16] - e.speedup[16]) < 1e-9
+
+
+def test_entry_fields_match_isolated_search_space():
+    """The GO search space includes the decode-friendly bm rows and the
+    split-K axis; isolated tiles stay un-split (step ① is tile-only)."""
+    assert {8, 16, 32} < {t.bm for t in CANDIDATE_TILES}
+    e = tune_gemm(GemmDesc(512, 512, 512))
+    assert e.isolated.split_k == 1
+
+
+def test_tile_for_cd_falls_forward_below_smallest_tuned_cd():
+    """Satellite fix: cd below the smallest tuned GO key must use the
+    nearest tuned CD's GO tile, not silently fall back to isolated."""
+    iso = TileConfig(512, 512, 256)
+    go4 = TileConfig(128, 128, 128, split_k=2)
+    go8 = TileConfig(128, 128, 256)
+    e = GOEntry(desc_key="x", isolated=iso, go={4: go4, 8: go8})
+    assert e.tile_for_cd(1) == iso          # ≤1 is the isolated launch
+    assert e.tile_for_cd(2) == go4          # below min tuned ⇒ fall forward
+    assert e.tile_for_cd(3) == go4
+    assert e.tile_for_cd(4) == go4          # boundary: exact tuned CD
+    assert e.tile_for_cd(7) == go4
+    assert e.tile_for_cd(8) == go8
+    assert e.tile_for_cd(100) == go8
+    # no GO entries at all (schema-stale library mid-retune) ⇒ isolated
+    assert GOEntry(desc_key="y", isolated=iso).tile_for_cd(4) == iso
+
+
+def test_split_k_go_kernel_wins_for_decode_class():
+    """Acceptance: split-K GO kernels win (modeled) for a skinny/decode
+    class at CD ≥ 8, vs the best un-split kernel on the same space."""
+    d = GemmDesc(8, 128, 16384)
+    e = tune_gemm(d)
+    e_unsplit = tune_gemm(d, split_ks=(1,))
+    for cd in (8, 16):
+        assert e.go[cd].split_k > 1, e.go
+        t_split = group_time([(d, e.go[cd])] * cd)
+        t_plain = group_time([(d, e_unsplit.go[cd])] * cd)
+        assert t_split < t_plain
+    # the decode class has no (m, n) parallelism anywhere in the space
+    from repro.core.cost_model import kernel_stats
+    assert all(
+        kernel_stats(d, t).n_tiles == 1 for t in CANDIDATE_TILES
+    )
+
+
+# ------------------------------------------------------------- persistence
+def test_library_schema_v2_roundtrip_preserves_split_k(tmp_path):
+    lib = GOLibrary()
+    d = GemmDesc(8, 128, 16384)           # decode class ⇒ split-K GO tiles
+    e = lib.get(d)
+    assert any(t.split_k > 1 for t in e.go.values())
+    p = tmp_path / "golib.json"
+    lib.save(p)
+    blob = json.loads(p.read_text())
+    assert blob["schema"] == SCHEMA_VERSION
+    lib2 = GOLibrary(p)
+    assert lib2.loaded_schema == SCHEMA_VERSION
+    assert lib2.get(d).go == e.go
+
+
+def test_library_stale_schema_discarded_with_warning(tmp_path):
+    """A bare v1 blob (no schema envelope, 3-element tiles) parses but its
+    entries are stale — tuned on the old search space — so they are
+    dropped and re-tuned instead of mis-planning."""
+    d = GemmDesc(1024, 1024, 1024)
+    v1 = {d.key(): {
+        "isolated": [256, 256, 256],
+        "go": {"2": [128, 128, 128]},
+        "rc_source": {"2": "GPU/2"},
+        "speedup": {"2": 1.5},
+    }}
+    p = tmp_path / "golib.json"
+    p.write_text(json.dumps(v1))
+    with pytest.warns(UserWarning, match="stale schema v1"):
+        lib = GOLibrary(p)
+    assert lib.loaded_schema == 1 and len(lib) == 0
+    fresh = lib.get(d)                    # lazily re-tuned on current space
+    assert fresh.isolated in CANDIDATE_TILES
+    lib.save()
+    assert json.loads(p.read_text())["schema"] == SCHEMA_VERSION
+
+
+def test_prewarm_batch_tunes_pool_in_one_sweep():
+    lib = GOLibrary()
+    pool = generate_gemm_pool(12, seed=21)
+    assert lib.prewarm(pool) == len(pool)
+    assert lib.prewarm(pool) == 0
+    # batch-tuned entries are identical to lazily tuned ones
+    for d, e in zip(pool, tune_gemm_batch(pool)):
+        got = lib.get(d)
+        assert got.isolated == e.isolated and got.go == e.go

@@ -1,0 +1,184 @@
+"""Batched cost model: bitwise parity with the scalar path, split-K
+accounting, and evaluation-count bookkeeping (DESIGN.md §13)."""
+import numpy as np
+import pytest
+
+from repro.core import DEFAULT_SPEC, GemmDesc
+from repro.core.cost_model import (
+    EVAL_COUNTER,
+    DescBatch,
+    TileBatch,
+    group_time,
+    group_time_batch,
+    group_time_ref,
+    isolated_time,
+    isolated_time_batch,
+    isolated_time_ref,
+    kernel_stats,
+    kernel_stats_batch,
+    kernel_stats_ref,
+    sequential_time,
+)
+from repro.core.tuner import (
+    CANDIDATE_TILES,
+    CDS,
+    LEGACY_CANDIDATE_TILES,
+    SPLIT_K_CANDIDATES,
+    tune_gemm,
+    tune_gemm_batch,
+    tune_gemm_reference,
+)
+from repro.kernels.gemm.ops import TileConfig
+
+STAT_FIELDS = ("n_tiles", "waves", "occupancy", "vmem_bytes", "hbm_bytes",
+               "flops", "mxu_util", "a_resident", "splits")
+
+DESCS = [
+    GemmDesc(8, 128, 16384),                      # decode/skinny
+    GemmDesc(4096, 4096, 4096),                   # compute-bound
+    GemmDesc(2048, 512, 20480),                   # large-K contention
+    GemmDesc(300, 200, 180, True, True, "f32"),   # ragged + transposed
+    GemmDesc(128, 256, 8192, batch=4),            # B-GEMM
+]
+
+FRACS = (1.0, 0.5, 0.25)
+
+
+def _grid_tiles():
+    return [TileConfig(t.bm, t.bn, t.bk, s)
+            for t in CANDIDATE_TILES for s in SPLIT_K_CANDIDATES]
+
+
+def test_batch_scalar_reference_parity_bitwise():
+    """Acceptance: batch == scalar wrapper == pure-Python reference,
+    bitwise, over the full candidate grid × RC fractions × CDs (split-K
+    included)."""
+    tiles = _grid_tiles()
+    tb = TileBatch.from_tiles(tiles)
+    for d in DESCS:
+        for frac in FRACS:
+            budget = int(DEFAULT_SPEC.vmem_bytes * frac)
+            batch_t = isolated_time_batch(
+                d, tb, DEFAULT_SPEC, vmem_budget=budget, bw_frac=frac)
+            st_batch = kernel_stats_batch(d, tb, budget)
+            # spot-check every 7th tile elementwise against both scalar
+            # paths (the full cross-product per desc is covered by the
+            # array comparison below)
+            for i in range(0, len(tiles), 7):
+                t = tiles[i]
+                s_wrap = kernel_stats(d, t, budget)
+                s_ref = kernel_stats_ref(d, t, budget)
+                for f in STAT_FIELDS:
+                    assert getattr(s_wrap, f) == getattr(s_ref, f), (f, t)
+                    assert getattr(s_wrap, f) == \
+                        np.asarray(getattr(st_batch, f))[
+                            () if np.ndim(getattr(st_batch, f)) == 0 else i
+                        ], (f, t)
+                it_wrap = isolated_time(d, t, DEFAULT_SPEC, budget, frac)
+                it_ref = isolated_time_ref(d, t, DEFAULT_SPEC, budget, frac)
+                assert it_wrap == it_ref == float(batch_t[i]), (d.key(), t)
+        # grouped: batch row == scalar wrapper == reference, bitwise
+        gt = group_time_batch(d, tb, CDS)
+        for ci, cd in enumerate(CDS):
+            for i in range(0, len(tiles), 11):
+                t = tiles[i]
+                members = [(d, t)] * cd
+                assert group_time(members) == group_time_ref(members) \
+                    == float(gt[ci, i]), (d.key(), t, cd)
+
+
+def test_heterogeneous_group_parity():
+    members = [(DESCS[i % len(DESCS)], _grid_tiles()[i * 13 % 252])
+               for i in range(6)]
+    assert group_time(members) == group_time_ref(members)
+    # sequential_time folds the same left-to-right order as a scalar loop
+    acc = 0.0
+    for d, t in members:
+        acc += isolated_time_ref(d, t)
+    assert sequential_time(members) == acc
+
+
+def test_desc_batch_matches_per_desc():
+    db = DescBatch.from_descs(DESCS)
+    t = TileConfig(128, 256, 256)
+    times = isolated_time_batch(db, t, DEFAULT_SPEC)
+    for i, d in enumerate(DESCS):
+        assert float(times[i]) == isolated_time(d, t)
+
+
+# ----------------------------------------------------------------- split-K
+def test_split_k_charges_partial_traffic_and_extra_launch():
+    d = GemmDesc(512, 512, 8192)
+    base = kernel_stats(d, TileConfig(128, 128, 256))
+    split = kernel_stats(d, TileConfig(128, 128, 256, split_k=4))
+    assert split.splits == 4
+    # partial C round-trip: 2 · s · M · N · 4 bytes
+    assert split.hbm_bytes == pytest.approx(
+        base.hbm_bytes + 2 * 4 * d.M * d.N * 4, rel=1e-12)
+    assert split.n_tiles == 4 * base.n_tiles
+    # the reduce epilogue costs one extra launch
+    t_iso = isolated_time(d, TileConfig(128, 128, 256))
+    t_split = isolated_time(d, TileConfig(128, 128, 256, split_k=4))
+    assert t_split > 0 and t_iso > 0
+
+
+def test_split_k_clamps_to_k_tiles():
+    d = GemmDesc(256, 256, 256)   # one k tile at bk=256
+    st = kernel_stats(d, TileConfig(128, 128, 256, split_k=8))
+    assert st.splits == 1
+    assert st.hbm_bytes == kernel_stats(d, TileConfig(128, 128, 256)).hbm_bytes
+
+
+def test_split_k_recovers_ramp_for_single_tile_gemms():
+    """The Stream-K credit: a skinny GEMM whose (m, n) grid is ONE tile
+    pays a full-traffic fill/drain ramp; split-K divides it."""
+    d = GemmDesc(8, 128, 16384)
+    t1 = TileConfig(128, 128, 512)
+    t4 = TileConfig(128, 128, 512, split_k=4)
+    assert kernel_stats(d, t1).n_tiles == 1
+    assert isolated_time(d, t4) < isolated_time(d, t1)
+    # ... and still wins under a CD=8 resource share (grouped)
+    assert group_time([(d, t4)] * 8) < group_time([(d, t1)] * 8)
+
+
+# ------------------------------------------------------------ eval counter
+def test_eval_counter_counts_batched_elements():
+    EVAL_COUNTER.reset()
+    d = DESCS[0]
+    tb = TileBatch.from_tiles(list(CANDIDATE_TILES))
+    kernel_stats_batch(d, tb)
+    assert EVAL_COUNTER.evals == len(CANDIDATE_TILES)
+    assert EVAL_COUNTER.calls == 1
+    kernel_stats(d, CANDIDATE_TILES[0])
+    assert EVAL_COUNTER.evals == len(CANDIDATE_TILES) + 1
+    assert EVAL_COUNTER.calls == 2
+
+
+def test_tuner_eval_budget_per_gemm():
+    """Count-based regression gate (mirrors benchmarks/tuning.py): the
+    vectorized tuner must stay within its committed evaluation budget."""
+    from repro.core.predictor import generate_gemm_pool
+
+    pool = generate_gemm_pool(16, seed=9)
+    EVAL_COUNTER.reset()
+    tune_gemm_batch(pool)
+    evals, calls = EVAL_COUNTER.snapshot()
+    assert evals / len(pool) <= 300
+    # constant calls per pool (2 broadcast sweeps), not per GEMM
+    assert calls <= 8 + len(pool) // 4
+
+
+# ----------------------------------------------------------- tuner parity
+def test_vectorized_tuner_matches_scalar_sweep_bitwise():
+    """Equal search space ⇒ identical entries, bitwise speedups — the
+    'modeled speedup unchanged' acceptance criterion."""
+    pool = DESCS
+    batch = tune_gemm_batch(pool, tiles=LEGACY_CANDIDATE_TILES,
+                            split_ks=(1,))
+    for d, be in zip(pool, batch):
+        ref = tune_gemm_reference(d)
+        one = tune_gemm(d, tiles=LEGACY_CANDIDATE_TILES, split_ks=(1,))
+        assert be.isolated == ref.isolated == one.isolated
+        assert be.go == ref.go == one.go
+        assert be.rc_source == ref.rc_source == one.rc_source
+        assert be.speedup == ref.speedup == one.speedup

@@ -133,6 +133,129 @@ def test_plan_cache_lru_eviction():
     assert all(not launch.cache_hit for launch in rt.flush(now=5.0))
 
 
+def test_plan_cache_lru_eviction_order_respects_recency():
+    """LRU must evict the least-RECENTLY-used signature, not the
+    least-recently-inserted one: touching A (a hit) before inserting C
+    must keep A and evict B."""
+    rt = _runtime(window_s=0.0, plan_cache_capacity=2)
+
+    def one(d, now):
+        rt.submit(d, now=now)
+        return rt.flush(now=now + 0.1)
+
+    one(SMALL, 0.0)                     # insert A
+    one(OTHER, 1.0)                     # insert B
+    assert all(l.cache_hit for l in one(SMALL, 2.0))    # touch A (hit)
+    one(GemmDesc(64, 64, 4096), 3.0)    # insert C ⇒ evicts B, keeps A
+    assert rt.plan_cache_size == 2
+    assert all(l.cache_hit for l in one(SMALL, 4.0))    # A retained
+    assert all(not l.cache_hit for l in one(OTHER, 5.0))  # B was evicted
+
+
+def test_plan_cache_hit_accounting_under_adversarial_thrash():
+    """Capacity-1 cache with alternating signatures: every flush is a miss
+    and the telemetry must say exactly that (no phantom hits), while the
+    same sequence at capacity 2 is all hits after warm-up."""
+    rt = _runtime(window_s=0.0, plan_cache_capacity=1)
+    for r in range(6):
+        d = SMALL if r % 2 == 0 else OTHER
+        rt.submit(d, now=float(r))
+        launches = rt.flush(now=r + 0.5)
+        assert all(not l.cache_hit for l in launches)
+    assert rt.telemetry.cache_hits == 0
+    assert rt.telemetry.cache_misses == 6
+    assert rt.telemetry.cache_hit_rate() == 0.0
+
+    rt2 = _runtime(window_s=0.0, plan_cache_capacity=2)
+    for r in range(6):
+        d = SMALL if r % 2 == 0 else OTHER
+        rt2.submit(d, now=float(r))
+        launches = rt2.flush(now=r + 0.5)
+        assert all(l.cache_hit == (r >= 2) for l in launches)
+    assert rt2.telemetry.cache_hits == 4
+    assert rt2.telemetry.cache_misses == 2
+
+
+# ------------------------------------------------------- dispatch fast path
+def test_steady_state_flush_zero_evals_zero_resorts():
+    """Acceptance: a plan-cache-hit flush performs 0 cost-model
+    evaluations and 0 signature re-sorts (DESIGN.md §13)."""
+    from repro.core.cost_model import EVAL_COUNTER
+
+    rt = _runtime(window_s=0.0)
+    bundle = [SMALL, SMALL, SMALL2, OTHER]
+    rt.prewarm(bundle)
+    for d in bundle:                     # cold round binds plans
+        rt.submit(d, now=0.0)
+    rt.flush(now=1.0)
+    for r in range(5):
+        now = 10.0 + r
+        for d in bundle:
+            rt.submit(d, now=now)
+        e0 = EVAL_COUNTER.evals
+        launches = rt.flush(now=now + 0.5)
+        assert launches and all(l.cache_hit for l in launches)
+        assert EVAL_COUNTER.evals - e0 == 0
+        assert rt.telemetry.last_flush_evals == 0
+    assert rt.telemetry.flush_sig_resorts == 0
+    # ... while prewarm's offline planning DID meter canonical sorts —
+    # the sig_resorts counter is live, not dead code
+    assert rt.telemetry.sig_resorts > 0
+    # and a signature that was never planned DOES evaluate
+    rt.submit(GemmDesc(96, 512, 512), now=100.0)
+    rt.submit(SMALL, now=100.0)
+    miss = rt.flush(now=101.0)
+    assert any(not l.cache_hit for l in miss)
+    assert rt.telemetry.last_flush_evals > 0
+    assert rt.telemetry.flush_evals > 0
+    assert rt.telemetry.flush_sig_resorts == 0
+
+
+def test_incremental_signature_matches_any_arrival_order():
+    """The admission-sorted queues must produce one canonical signature
+    for every permutation of the same multiset of descs."""
+    import itertools
+
+    descs = [SMALL, SMALL2, SMALL, GemmDesc(512, 512, 512)]
+    rt = _runtime(window_s=0.0)
+    for perm in itertools.permutations(range(len(descs))):
+        for i in perm:
+            rt.submit(descs[i], now=0.0)
+        launches = rt.flush(now=1.0)
+        if perm == tuple(range(len(descs))):
+            first_plans = [(l.plan.cd, l.plan.mode) for l in launches]
+            continue
+        assert all(l.cache_hit for l in launches)
+        assert [(l.plan.cd, l.plan.mode) for l in launches] == first_plans
+
+
+def test_set_mesh_invalidates_plans_and_memoized_cds():
+    """set_mesh interacts with the incremental signature: pending tickets
+    survive, but cached plans AND the controller's memoized CD decisions
+    must be dropped so the derated spec re-plans from scratch."""
+    from types import SimpleNamespace
+
+    rt = _runtime(window_s=0.0)
+    for _ in range(8):
+        rt.submit(SMALL, now=0.0)
+    rt.flush(now=1.0)
+    assert rt.plan_cache_size > 0
+    assert rt.ctrl._cd_cache             # memoized decisions exist
+
+    mesh = SimpleNamespace(axis_names=("data", "model"),
+                           shape={"data": 1, "model": 4})
+    for _ in range(8):                   # pending tickets across set_mesh
+        rt.submit(SMALL, now=2.0)
+    res = rt.set_mesh(mesh)
+    assert rt.plan_cache_size == 0
+    assert not rt.ctrl._cd_cache and not rt.ctrl._feat_cache
+    assert rt.available == res.slot_budget < 16
+    launches = rt.flush(now=3.0)
+    assert launches and all(not l.cache_hit for l in launches)
+    assert all(l.plan.cd <= res.slot_budget for l in launches)
+    assert rt.telemetry.flush_sig_resorts == 0
+
+
 # ---------------------------------------------------------------- fairness
 def test_round_robin_interleaves_compatibility_classes():
     rt = _runtime(window_s=0.0)
