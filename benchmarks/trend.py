@@ -1,0 +1,113 @@
+"""Benchmark-trend gate — compares fresh ``BENCH_*.json`` reports against
+the copies committed at ``results/`` (the CI ``bench-trend`` job).
+
+Contract: every benchmark report may carry a top-level ``trend_metrics``
+object::
+
+    "trend_metrics": {
+        "<metric>": {"value": <number>, "better": "higher" | "lower"},
+        ...
+    }
+
+Each metric is *count-based or modeled* (deterministic on shared
+runners — wall-clock numbers stay out of this gate).  The checker is
+benchmark-agnostic: for every report present in both trees it walks the
+current report's metrics, looks up the committed baseline value, and
+fails when the value regressed by more than ``--tolerance`` (default
+10%) in the metric's declared direction.  Metrics new in the current
+report (no baseline yet) pass — committing the fresh JSON is what
+establishes their trajectory; a zero baseline of a lower-is-better
+metric must stay zero.
+
+    python -m benchmarks.trend --baseline <dir-with-committed-jsons> \
+        [--current results] [--tolerance 0.10]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List
+
+
+def compare_reports(
+    baseline: Dict, current: Dict, name: str, tolerance: float,
+) -> List[str]:
+    fails: List[str] = []
+    # Several metrics are raw counts that scale with the run's flags
+    # (duration, trace selection, mixed-ops): comparing reports produced
+    # under different flags would flag phantom regressions, so refuse.
+    bf, cf = baseline.get("flags"), current.get("flags")
+    if bf is not None and cf is not None and bf != cf:
+        return [
+            f"{name}: baseline was generated with flags {bf} but this run "
+            f"used {cf} — regenerate the committed baseline with the "
+            "canonical command (see the benchmark's docstring) instead of "
+            "comparing across flag sets"
+        ]
+    base_metrics = baseline.get("trend_metrics", {})
+    for metric, spec in current.get("trend_metrics", {}).items():
+        base = base_metrics.get(metric)
+        if base is None:
+            continue                       # new metric: baseline starts now
+        bv, cv = float(base["value"]), float(spec["value"])
+        better = spec.get("better", "higher")
+        if better == "higher":
+            floor = bv * (1.0 - tolerance)
+            if cv < floor:
+                fails.append(
+                    f"{name}:{metric} regressed: {cv:g} < {floor:g} "
+                    f"(baseline {bv:g}, higher is better)")
+        else:
+            ceil = bv * (1.0 + tolerance) if bv > 0 else 0.0
+            if cv > ceil:
+                fails.append(
+                    f"{name}:{metric} regressed: {cv:g} > {ceil:g} "
+                    f"(baseline {bv:g}, lower is better)")
+    return fails
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--current", default="results",
+                    help="directory holding the freshly produced reports")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed fractional regression (default 0.10)")
+    args = ap.parse_args(argv)
+
+    base_dir, cur_dir = Path(args.baseline), Path(args.current)
+    cur_files = sorted(cur_dir.glob("BENCH_*.json"))
+    if not cur_files:
+        print(f"::error::no BENCH_*.json in {cur_dir}")
+        return 1
+    fails: List[str] = []
+    checked = 0
+    for cur_path in cur_files:
+        base_path = base_dir / cur_path.name
+        if not base_path.exists():
+            print(f"# {cur_path.name}: no committed baseline — trajectory "
+                  "starts with this run")
+            continue
+        current = json.loads(cur_path.read_text())
+        baseline = json.loads(base_path.read_text())
+        n = len(current.get("trend_metrics", {}))
+        checked += n
+        fs = compare_reports(baseline, current, cur_path.name,
+                             args.tolerance)
+        fails += fs
+        print(f"# {cur_path.name}: {n} metrics, "
+              f"{len(fs)} regression(s)")
+    if fails:
+        for f in fails:
+            print(f"::error::{f}")
+        return 1
+    print(f"# bench-trend OK: {checked} metrics within "
+          f"{args.tolerance:.0%} of committed baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

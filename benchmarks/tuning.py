@@ -228,6 +228,32 @@ def main(argv=None) -> Dict[str, object]:
     report["tuner"] = bench_tuner(n)
     report["flush"] = bench_flush(rounds)
     report["split_k"] = bench_splitk()
+    # Count-based trajectory record for the CI bench-trend gate
+    # (`benchmarks/trend.py`): deterministic metrics only — wall-clock
+    # numbers live in the report but are never trend-gated.
+    report["trend_metrics"] = {
+        "tuner_evals_per_gemm": {
+            "value": report["tuner"]["vec_full_evals_per_gemm"],
+            "better": "lower"},
+        "tuner_model_calls": {
+            "value": report["tuner"]["vec_full_model_calls"],
+            "better": "lower"},
+        "search_space_expansion": {
+            "value": report["tuner"]["search_space"]["expansion_factor"],
+            "better": "higher"},
+        "flush_evals_per_hit": {
+            "value": report["flush"]["flush_evals_per_hit"],
+            "better": "lower"},
+        "flush_sig_resorts": {
+            "value": report["flush"]["flush_sig_resorts"],
+            "better": "lower"},
+        "flush_steady_hit_rate": {
+            "value": report["flush"]["steady_state_hit_rate"],
+            "better": "higher"},
+        "split_k_classes_won": {
+            "value": report["split_k"]["classes_won"],
+            "better": "higher"},
+    }
 
     RESULTS.mkdir(exist_ok=True)
     out_path = RESULTS / "BENCH_tuning.json"

@@ -24,6 +24,10 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--mixed-ops", action="store_true",
+                    help="co-schedule the full decode op bundle (GEMMs + "
+                         "MLA attention + MoE grouped-GEMM) as one "
+                         "heterogeneous concurrent group (DESIGN.md §14)")
     args = ap.parse_args(argv)
 
     cfg = get_arch("deepseek-v2-lite-16b").reduced()
@@ -46,7 +50,7 @@ def main(argv=None):
     toks = greedy_decode(
         model, params, prompt,
         s_max=args.prompt_len + args.gen + 1, steps=args.gen,
-        runtime=runtime, tenant=cfg.name,
+        runtime=runtime, tenant=cfg.name, mixed_ops=args.mixed_ops,
     )
     dt = time.time() - t0
     print(f"[serve_moe] batch={args.batch} prompt={args.prompt_len} "

@@ -12,12 +12,21 @@ from repro.core.cost_model import (
 )
 from repro.core.gemm_desc import GemmDesc
 from repro.core.library import GOLibrary, default_library
+from repro.core.op_desc import (
+    FAMILIES,
+    AttentionDesc,
+    GroupedGemmDesc,
+    ScanDesc,
+    family_of,
+    op_from_key,
+)
 from repro.core.predictor import (
     CLASSES,
     Predictor,
     accuracy_by_available,
     gemm_features,
     generate_gemm_pool,
+    op_features,
     profile_dataset,
     train_predictor,
 )
@@ -35,15 +44,17 @@ from repro.core.tuner import (
     go_kernel_properties,
     tune_gemm,
     tune_gemm_batch,
+    tune_op,
 )
 
 __all__ = [
     "DEFAULT_SPEC", "RC_FRACTIONS", "TPUSpec", "group_time", "isolated_time",
     "kernel_stats", "sequential_time", "speedup_vs_sequential", "GemmDesc",
-    "GOLibrary", "default_library", "CLASSES", "Predictor",
-    "accuracy_by_available", "gemm_features", "generate_gemm_pool",
-    "profile_dataset", "train_predictor", "CP_OVERHEAD_S",
-    "ConcurrencyController", "GemmRequest", "GroupPlan", "Schedule",
-    "compat_key", "CDS", "GOEntry", "go_kernel_properties", "tune_gemm",
-    "tune_gemm_batch",
+    "GOLibrary", "default_library", "FAMILIES", "AttentionDesc",
+    "GroupedGemmDesc", "ScanDesc", "family_of", "op_from_key", "CLASSES",
+    "Predictor", "accuracy_by_available", "gemm_features",
+    "generate_gemm_pool", "op_features", "profile_dataset",
+    "train_predictor", "CP_OVERHEAD_S", "ConcurrencyController",
+    "GemmRequest", "GroupPlan", "Schedule", "compat_key", "CDS", "GOEntry",
+    "go_kernel_properties", "tune_gemm", "tune_gemm_batch", "tune_op",
 ]

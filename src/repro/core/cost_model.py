@@ -48,6 +48,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.gemm_desc import GemmDesc
+from repro.core.op_desc import AttentionDesc, GroupedGemmDesc, ScanDesc, family_of
 from repro.kernels.gemm.ops import TileConfig
 
 
@@ -327,7 +328,13 @@ def kernel_stats_batch(
     """Vectorized `kernel_stats`: ``d`` is a `GemmDesc` or `DescBatch`,
     ``t`` a `TileConfig` or `TileBatch`, ``vmem_budget`` a scalar or array;
     all broadcast together.  This is THE model — the scalar path wraps it.
+
+    Non-GEMM `OpDesc` families (DESIGN.md §14) dispatch to their own
+    struct-of-arrays models below; the GEMM path is byte-for-byte the
+    pre-heterogeneous one.
     """
+    if not isinstance(d, (GemmDesc, DescBatch)):
+        return _FAMILY_STATS[family_of(d)](d, t, vmem_budget, spec)
     p = pre if pre is not None else tile_precompute(d, t, spec)
     budget = spec.vmem_bytes if vmem_budget is None else vmem_budget
 
@@ -362,7 +369,16 @@ def isolated_time_batch(
     pre: TilePrecomp | None = None,
 ) -> np.ndarray:
     """Vectorized `isolated_time` (one launch per evaluation slot; split-K
-    kernels pay one extra launch for the reduce epilogue)."""
+    kernels pay one extra launch for the reduce epilogue).  Non-GEMM
+    families share the same roofline composition over their own stats."""
+    if not isinstance(d, (GemmDesc, DescBatch)):
+        st = kernel_stats_batch(d, t, vmem_budget, spec)
+        compute = st.flops / (spec.peak(_compute_dtype(d)) * st.mxu_util)
+        bw = spec.hbm_bw * bw_frac
+        memory = st.hbm_bytes / bw
+        ramp = spec.pipeline_fill_tiles * (st.hbm_bytes / st.n_tiles / bw)
+        return (np.maximum(compute, memory) + ramp
+                + spec.launch_overhead_s)
     p = pre if pre is not None else tile_precompute(d, t, spec)
     st = kernel_stats_batch(d, t, vmem_budget, spec, pre=p)
     compute = st.flops / (p.peak * st.mxu_util)
@@ -445,6 +461,11 @@ def sequential_time(
 ) -> float:
     if not members:
         return 0.0
+    if not _all_gemm(members):
+        acc = 0.0
+        for d, t in members:
+            acc += float(isolated_time_batch(d, t, spec))
+        return acc
     db = DescBatch.from_descs([d for d, _ in members])
     tb = TileBatch.from_tiles([t for _, t in members])
     times = isolated_time_batch(db, tb, spec)
@@ -468,11 +489,19 @@ def group_time(
     member via the VMEM *share*).  Heterogeneous members are evaluated in
     one batched model call; the float folds run left-to-right so the
     result is bitwise identical to the pre-vectorization member loop.
+
+    Mixed-family groups (DESIGN.md §14) take a per-member dispatch loop
+    through the same overlap math: the per-family stats supply each
+    member's compute/memory/working-set terms, so a decode bundle's QKV
+    GEMMs, attention, MoE grouped-GEMM, and scan share one concurrency
+    model.  The GEMM-only fast path below is untouched (bitwise).
     """
     G = len(members)
     if G == 0:
         return 0.0
     share = spec.vmem_bytes // G
+    if not _all_gemm(members):
+        return _group_time_mixed(members, share, spec)
     db = DescBatch.from_descs([d for d, _ in members])
     tb = TileBatch.from_tiles([t for _, t in members])
     st = kernel_stats_batch(db, tb, vmem_budget=share, spec=spec)
@@ -484,14 +513,30 @@ def group_time(
     sum_m = _fold(mems)
     serial = _fold(np.maximum(comps, mems))
     total_ws = _fold(st.vmem_bytes)
+    return _compose_group_time(
+        sum_c, sum_m, serial, total_ws, float(np.max(ramps)),
+        bool(np.any(st.splits > 1)), spec,
+    )
+
+
+def _compose_group_time(
+    sum_c: float, sum_m: float, serial: float, total_ws: float,
+    max_ramp: float, any_split: bool, spec: TPUSpec,
+) -> float:
+    """The overlap/pressure composition for one grouped launch (§2): both
+    live scalar paths — the GEMM fold (`group_time`) and the mixed-family
+    member loop (`_group_time_mixed`) — compose through THIS function, so
+    a calibration change cannot silently diverge between them.
+    (`group_time_ref` keeps its own copy by design: it is the bitwise
+    parity oracle; `group_time_batch` carries the array form.)"""
     pressure = total_ws / spec.vmem_bytes
     overlap = min(1.0, 1.0 / pressure) if pressure > 0 else 1.0
     ideal = max(sum_c, sum_m)
     t_exec = overlap * ideal + (1.0 - overlap) * (
         serial * (1.0 + 0.25 * max(0.0, pressure - 1.0))
     )
-    launches = 2.0 if bool(np.any(st.splits > 1)) else 1.0
-    return t_exec + float(np.max(ramps)) + launches * spec.launch_overhead_s
+    launches = 2.0 if any_split else 1.0
+    return t_exec + max_ramp + launches * spec.launch_overhead_s
 
 
 def _fold(x: np.ndarray) -> float:
@@ -499,6 +544,38 @@ def _fold(x: np.ndarray) -> float:
     for v in x:
         acc += float(v)
     return acc
+
+
+def _all_gemm(members) -> bool:
+    return all(isinstance(d, GemmDesc) for d, _ in members)
+
+
+def _compute_dtype(d) -> str:
+    """MXU issue dtype of an op — `ScanDesc` stages in f32 regardless of
+    the model dtype (§14.1); every other family issues at its dtype."""
+    return getattr(d, "compute_dtype", d.dtype)
+
+
+def _group_time_mixed(members, share: int, spec: TPUSpec) -> float:
+    """Heterogeneous-family grouped launch: per-member family stats fed
+    through the same overlap/pressure math as the GEMM fold (the ACS-style
+    shared resource model — each member sees a 1/G VMEM share)."""
+    comps, mems, sers, wss, ramps = [], [], [], [], []
+    any_split = False
+    for d, t in members:
+        st = kernel_stats_batch(d, t, vmem_budget=share, spec=spec).item()
+        peak = spec.peak(_compute_dtype(d))
+        comps.append(st.flops / (peak * st.mxu_util))
+        mems.append(st.hbm_bytes / spec.hbm_bw)
+        ramps.append(spec.pipeline_fill_tiles
+                     * (st.hbm_bytes / st.n_tiles / spec.hbm_bw))
+        sers.append(max(comps[-1], mems[-1]))
+        wss.append(st.vmem_bytes)
+        any_split = any_split or st.splits > 1
+    return _compose_group_time(
+        sum(comps), sum(mems), sum(sers), sum(wss), max(ramps),
+        any_split, spec,
+    )
 
 
 def speedup_vs_sequential(
@@ -606,6 +683,296 @@ def group_time_ref(
     )
     launches = 2.0 if any_split else 1.0
     return t_exec + max(ramps) + launches * spec.launch_overhead_s
+
+
+# ----------------------------------------- per-family op models (§14)
+# Each family mirrors the GEMM model's structure: a geometry helper
+# (budget-independent tile math), a vectorized stats function over
+# (TileBatch × budget) arrays, and a pure-Python `*_ref` parity oracle.
+# All times compose through the same `isolated_time_batch` /
+# `group_time` rooflines, so a mixed-family group is evaluated with one
+# consistent overlap model.
+
+def _tile_dims(t):
+    return np.asarray(t.bm), np.asarray(t.bn), np.asarray(t.bk)
+
+
+def _attn_geom(d: AttentionDesc, t, spec: TPUSpec):
+    """(bq, bkv, tq, tkv, ws, kv_panel) for the flash kernel: kv is the
+    sequential inner sweep (the GEMM K analogue), q blocks × (B·Hq) are
+    the parallel grid."""
+    bm, bn, _ = _tile_dims(t)
+    bq = np.minimum(bm, _round_up(d.Sq, 8))
+    bkv = np.minimum(bn, _round_up(d.Skv, spec.mxu_dim))
+    tq = _cdiv(d.Sq, bq)
+    tkv = _cdiv(d.Skv, bkv)
+    ib = d.in_bytes
+    # double-buffered K/V tiles + Q tile + online-softmax scratch
+    # (m, l replicated to 128 lanes; f32 acc) + output tile.
+    ws = (2 * (2 * bkv * d.D * ib) + bq * d.D * ib
+          + (2 * bq * 128 + bq * d.D) * 4 + bq * d.D * ib)
+    kv_panel = 2.0 * d.Skv * d.D * ib      # one head's K+V, residency unit
+    return bq, bkv, tq, tkv, ws, kv_panel
+
+
+def attention_stats_batch(
+    d: AttentionDesc, t, vmem_budget=None, spec: TPUSpec = DEFAULT_SPEC,
+) -> KernelStatsBatch:
+    """O(Sq·Skv) attention with causal credit: the block-sparse causal
+    iteration skips masked kv blocks (kernel `pl.when` frontier), so
+    FLOPs and K/V traffic scale by `causal_credit`.  K/V residency in
+    the VMEM share plays the GEMM A-panel role — losing it at high CD
+    re-reads K/V once per q block."""
+    budget = spec.vmem_bytes if vmem_budget is None else vmem_budget
+    bq, bkv, tq, tkv, ws, kv_panel = _attn_geom(d, t, spec)
+    credit = d.causal_credit
+    n_tiles = d.B * d.Hq * tq
+    resid_frac = np.minimum(np.maximum(
+        (budget - ws) / kv_panel, 0.0), 1.0)
+    kv_resident = resid_frac >= 1.0
+    eff_reads = tq - resid_frac * (tq - 1)
+    kv_unit = d.B * d.Hkv * d.Skv * d.D * d.in_bytes * 2.0 * credit
+    qo_bytes = 2.0 * d.B * d.Hq * d.Sq * d.D * d.in_bytes
+    hbm = eff_reads * kv_unit + qo_bytes
+    flops = 4.0 * d.B * d.Hq * (tq * bq) * (tkv * bkv) * d.D * credit
+    util = (_align_eff(bq, spec.mxu_dim) * _align_eff(bkv, spec.mxu_dim)
+            * _align_eff(d.D, spec.mxu_dim))
+    slots = np.maximum(1, budget // ws)
+    waves = n_tiles / np.minimum(slots, spec.pipeline_fill_tiles * 4)
+    occ = np.minimum(1.0, (ws + resid_frac * kv_panel) / budget)
+    EVAL_COUNTER.add(np.size(waves))
+    return KernelStatsBatch(
+        n_tiles=np.asarray(n_tiles), waves=np.asarray(waves),
+        occupancy=np.asarray(occ),
+        vmem_bytes=np.asarray(ws + np.where(kv_resident, kv_panel, 0.0)),
+        hbm_bytes=np.asarray(hbm), flops=np.asarray(flops),
+        mxu_util=np.asarray(util), a_resident=np.asarray(kv_resident),
+        splits=np.ones_like(np.asarray(n_tiles)),
+    )
+
+
+def _grouped_geom(d: GroupedGemmDesc, t, spec: TPUSpec):
+    """Ragged expert pool: per-expert row counts prepend an expert axis
+    that is reduced inside the stats, so the public shape matches the
+    tile/budget broadcast like every other family."""
+    bm, bn, bk = _tile_dims(t)
+    mxu = spec.mxu_dim
+    bm_c = np.minimum(bm, _round_up(d.M, mxu))
+    bn_c = np.minimum(bn, _round_up(d.N, mxu))
+    bk_c = np.minimum(bk, _round_up(d.K, mxu))
+    ib = d.in_bytes
+    ws = (2 * (bm_c * bk_c + bk_c * bn_c) * ib
+          + bm_c * bn_c * 4 + bm_c * bn_c * ib)
+    a_panel = bm_c * d.K * ib
+    return bm_c, bn_c, bk_c, ws, a_panel
+
+
+def grouped_stats_batch(
+    d: GroupedGemmDesc, t, vmem_budget=None, spec: TPUSpec = DEFAULT_SPEC,
+) -> KernelStatsBatch:
+    """Ragged grouped GEMM: G experts, per-expert rows padded up to the
+    bm block (the ragged launch's tail-quantization waste), expert
+    weights streamed once per m-tile sweep."""
+    budget = spec.vmem_bytes if vmem_budget is None else vmem_budget
+    bm_c, bn_c, bk_c, ws, a_panel = _grouped_geom(d, t, spec)
+    rows = np.asarray(d.row_vector(), np.int64)
+    base = np.broadcast_shapes(np.shape(bm_c), np.shape(ws),
+                               np.shape(np.asarray(budget)))
+    r = rows.reshape((d.G,) + (1,) * len(base))
+    bm_e = np.minimum(bm_c, _round_up(np.maximum(r, 1), 8))
+    tm = np.where(r > 0, _cdiv(np.maximum(r, 1), bm_e), 0)
+    tn = _cdiv(d.N, bn_c)
+    tk = _cdiv(d.K, bk_c)
+    ib = d.in_bytes
+    n_tiles = np.maximum((tm * tn).sum(0), 1)
+    resid_frac = np.minimum(np.maximum(
+        (budget - ws) / a_panel, 0.0), 1.0)
+    a_resident = resid_frac >= 1.0
+    eff_reads = tn - resid_frac * (tn - 1)
+    a_unit = d.M * d.K * ib
+    b_bytes = tm.sum(0) * (d.K * d.N * ib)
+    c_bytes = d.M * d.N * ib
+    hbm = eff_reads * a_unit + b_bytes + c_bytes
+    flops = 2.0 * (tm * bm_e).sum(0) * (tn * bn_c) * (tk * bk_c)
+    util = (_align_eff(bm_c, spec.mxu_dim) * _align_eff(bn_c, spec.mxu_dim)
+            * _align_eff(bk_c, spec.mxu_dim))
+    slots = np.maximum(1, budget // ws)
+    waves = n_tiles / np.minimum(slots, spec.pipeline_fill_tiles * 4)
+    occ = np.minimum(1.0, (ws + resid_frac * a_panel) / budget)
+    EVAL_COUNTER.add(np.size(waves))
+    return KernelStatsBatch(
+        n_tiles=np.asarray(n_tiles), waves=np.asarray(waves),
+        occupancy=np.asarray(occ),
+        vmem_bytes=np.asarray(ws + np.where(a_resident, a_panel, 0.0)),
+        hbm_bytes=np.asarray(hbm), flops=np.asarray(flops),
+        mxu_util=np.asarray(util), a_resident=np.asarray(a_resident),
+        splits=np.ones_like(np.asarray(n_tiles)),
+    )
+
+
+def _scan_geom(d: ScanDesc, t, spec: TPUSpec):
+    """(L, n_chunks, ws): chunk length L is the tunable axis (tile.bm);
+    the chunk sweep is sequential per (batch, head)."""
+    bm, _, _ = _tile_dims(t)
+    L = np.maximum(np.minimum(bm, _round_up(d.T, 8)), 8)
+    n_chunks = _cdiv(d.T, L)
+    ib = d.in_bytes                       # f32 staging (4 B)
+    # double-buffered chunk inputs (xd, da, B, C) + state scratch + y out
+    ws = 2 * (L * d.P + L + 2 * L * d.N) * ib + d.N * d.P * 4 + L * d.P * ib
+    return L, n_chunks, ws
+
+
+def scan_stats_batch(
+    d: ScanDesc, t, vmem_budget=None, spec: TPUSpec = DEFAULT_SPEC,
+) -> KernelStatsBatch:
+    """Chunked SSD scan: bandwidth-bound streaming of (xd, da, B, C, y)
+    with a *sequential* chunk sweep per (b, h) — parallelism is capped at
+    B·H, so waves floor at n_chunks regardless of VMEM share (the
+    family's defining concurrency behaviour: it fills bubbles of
+    compute-bound co-runners without competing for MXU)."""
+    budget = spec.vmem_bytes if vmem_budget is None else vmem_budget
+    L, n_chunks, ws = _scan_geom(d, t, spec)
+    BH = d.B * d.H
+    ib = d.in_bytes
+    n_tiles = BH * n_chunks
+    hbm = (BH * ((2 * d.T * d.P + d.T + 2 * d.T * d.N) * ib
+                 + 2 * d.N * d.P * 4)) * np.ones_like(np.asarray(ws, float))
+    flops = BH * n_chunks * (2.0 * L * L * (d.N + d.P) + 4.0 * L * d.N * d.P)
+    util = (_align_eff(L, spec.mxu_dim) * _align_eff(d.N, spec.mxu_dim)
+            * _align_eff(d.P, spec.mxu_dim))
+    slots = np.maximum(1, budget // ws)
+    # sequential chunk dim: at least n_chunks waves even with free slots
+    waves = n_chunks * np.maximum(
+        1.0, BH / np.minimum(slots, spec.pipeline_fill_tiles * 4))
+    occ = np.minimum(1.0, ws / budget)
+    EVAL_COUNTER.add(np.size(waves))
+    return KernelStatsBatch(
+        n_tiles=np.asarray(n_tiles), waves=np.asarray(waves),
+        occupancy=np.asarray(occ), vmem_bytes=np.asarray(ws, float),
+        hbm_bytes=np.asarray(hbm), flops=np.asarray(flops),
+        mxu_util=np.asarray(util),
+        a_resident=np.zeros(np.shape(np.asarray(ws)), bool),
+        splits=np.ones_like(np.asarray(n_tiles)),
+    )
+
+
+_FAMILY_STATS = {
+    "flash_attention": attention_stats_batch,
+    "grouped_gemm": grouped_stats_batch,
+    "mamba_scan": scan_stats_batch,
+}
+
+
+def op_tile_ws(d, t, spec: TPUSpec = DEFAULT_SPEC):
+    """Raw per-instance working set of a (desc, tile) pair for any family
+    — the tuner's feasibility predicate (`ws ≤ RC budget`)."""
+    fam = family_of(d)
+    if fam == "flash_attention":
+        return _attn_geom(d, t, spec)[4]
+    if fam == "grouped_gemm":
+        return _grouped_geom(d, t, spec)[3]
+    if fam == "mamba_scan":
+        return _scan_geom(d, t, spec)[2]
+    return t.vmem_bytes(d.in_bytes)
+
+
+def op_kernel_stats_ref(
+    d, t: TileConfig, vmem_budget: int | None = None,
+    spec: TPUSpec = DEFAULT_SPEC,
+) -> KernelStats:
+    """Pure-Python parity oracle for the per-family batched models
+    (mirrors `kernel_stats_ref`'s role for the GEMM path; same operation
+    order as the batched code so results stay bitwise equal)."""
+    fam = family_of(d)
+    if fam == "gemm":
+        return kernel_stats_ref(d, t, vmem_budget, spec)
+    EVAL_COUNTER.add(1)
+    budget = vmem_budget if vmem_budget is not None else spec.vmem_bytes
+    mxu = spec.mxu_dim
+    if fam == "flash_attention":
+        bq = min(t.bm, _round_up(d.Sq, 8))
+        bkv = min(t.bn, _round_up(d.Skv, mxu))
+        tq, tkv = _cdiv(d.Sq, bq), _cdiv(d.Skv, bkv)
+        ib = d.in_bytes
+        ws = (2 * (2 * bkv * d.D * ib) + bq * d.D * ib
+              + (2 * bq * 128 + bq * d.D) * 4 + bq * d.D * ib)
+        kv_panel = 2.0 * d.Skv * d.D * ib
+        credit = d.causal_credit
+        n_tiles = d.B * d.Hq * tq
+        resid_frac = min(max((budget - ws) / kv_panel, 0.0), 1.0)
+        kv_resident = resid_frac >= 1.0
+        eff_reads = tq - resid_frac * (tq - 1)
+        kv_unit = d.B * d.Hkv * d.Skv * d.D * ib * 2.0 * credit
+        qo_bytes = 2.0 * d.B * d.Hq * d.Sq * d.D * ib
+        hbm = eff_reads * kv_unit + qo_bytes
+        flops = 4.0 * d.B * d.Hq * (tq * bq) * (tkv * bkv) * d.D * credit
+        util = (_align_eff(bq, mxu) * _align_eff(bkv, mxu)
+                * _align_eff(d.D, mxu))
+        slots = max(1, budget // ws)
+        waves = n_tiles / min(slots, spec.pipeline_fill_tiles * 4)
+        occ = min(1.0, (ws + resid_frac * kv_panel) / budget)
+        return KernelStats(
+            n_tiles=int(n_tiles), waves=float(waves), occupancy=float(occ),
+            vmem_bytes=float(ws + (kv_panel if kv_resident else 0.0)),
+            hbm_bytes=float(hbm), flops=float(flops), mxu_util=float(util),
+            a_resident=bool(kv_resident), splits=1,
+        )
+    if fam == "grouped_gemm":
+        bm_c = min(t.bm, _round_up(d.M, mxu))
+        bn_c = min(t.bn, _round_up(d.N, mxu))
+        bk_c = min(t.bk, _round_up(d.K, mxu))
+        ib = d.in_bytes
+        ws = (2 * (bm_c * bk_c + bk_c * bn_c) * ib
+              + bm_c * bn_c * 4 + bm_c * bn_c * ib)
+        a_panel = bm_c * d.K * ib
+        rows = d.row_vector()
+        tn, tk = _cdiv(d.N, bn_c), _cdiv(d.K, bk_c)
+        tm_sum, padded_m = 0, 0
+        for r in rows:
+            if r <= 0:
+                continue
+            bm_e = min(bm_c, _round_up(max(r, 1), 8))
+            tm = _cdiv(max(r, 1), bm_e)
+            tm_sum += tm
+            padded_m += tm * bm_e
+        n_tiles = max(tm_sum * tn, 1)
+        resid_frac = min(max((budget - ws) / a_panel, 0.0), 1.0)
+        a_resident = resid_frac >= 1.0
+        eff_reads = tn - resid_frac * (tn - 1)
+        hbm = (eff_reads * (d.M * d.K * ib) + tm_sum * (d.K * d.N * ib)
+               + d.M * d.N * ib)
+        flops = 2.0 * padded_m * (tn * bn_c) * (tk * bk_c)
+        util = (_align_eff(bm_c, mxu) * _align_eff(bn_c, mxu)
+                * _align_eff(bk_c, mxu))
+        slots = max(1, budget // ws)
+        waves = n_tiles / min(slots, spec.pipeline_fill_tiles * 4)
+        occ = min(1.0, (ws + resid_frac * a_panel) / budget)
+        return KernelStats(
+            n_tiles=int(n_tiles), waves=float(waves), occupancy=float(occ),
+            vmem_bytes=float(ws + (a_panel if a_resident else 0.0)),
+            hbm_bytes=float(hbm), flops=float(flops), mxu_util=float(util),
+            a_resident=bool(a_resident), splits=1,
+        )
+    # mamba_scan
+    L = max(min(t.bm, _round_up(d.T, 8)), 8)
+    n_chunks = _cdiv(d.T, L)
+    BH = d.B * d.H
+    ib = d.in_bytes
+    ws = 2 * (L * d.P + L + 2 * L * d.N) * ib + d.N * d.P * 4 + L * d.P * ib
+    n_tiles = BH * n_chunks
+    hbm = BH * ((2 * d.T * d.P + d.T + 2 * d.T * d.N) * ib
+                + 2 * d.N * d.P * 4)
+    flops = BH * n_chunks * (2.0 * L * L * (d.N + d.P) + 4.0 * L * d.N * d.P)
+    util = (_align_eff(L, mxu) * _align_eff(d.N, mxu)
+            * _align_eff(d.P, mxu))
+    slots = max(1, budget // ws)
+    waves = n_chunks * max(1.0, BH / min(slots, spec.pipeline_fill_tiles * 4))
+    occ = min(1.0, ws / budget)
+    return KernelStats(
+        n_tiles=int(n_tiles), waves=float(waves), occupancy=float(occ),
+        vmem_bytes=float(ws), hbm_bytes=float(hbm), flops=float(flops),
+        mxu_util=float(util), a_resident=False, splits=1,
+    )
 
 
 # ------------------------------------------------------------------ helpers

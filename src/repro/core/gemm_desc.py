@@ -24,6 +24,12 @@ class GemmDesc:
     dtype: str = "bf16"
     batch: int = 1  # strided batched-GEMM count (B-GEMM §6.7); 1 = plain
 
+    family = "gemm"  # OpDesc protocol (core/op_desc.py, DESIGN.md §14)
+
+    @property
+    def mnk_like(self) -> tuple:
+        return (self.M, self.N, self.K)
+
     @property
     def flops(self) -> int:
         return 2 * self.M * self.N * self.K * self.batch

@@ -8,11 +8,17 @@ vendor BLAS tuning cache.
 
 The on-disk blob is versioned (``SCHEMA_VERSION``): v2 added the split-K
 axis to persisted tiles (4-element lists) and wrapped entries under a
-``{"schema": 2, "entries": ...}`` envelope.  Loading is backward
-compatible — a bare v1 blob parses, its 3-element tiles defaulting to
-``split_k = 1`` — but entries tuned under an *older schema's search
-space* are stale and would mis-plan, so they are discarded with a warning
-and re-tuned lazily instead of being trusted.
+``{"schema": 2, "entries": ...}`` envelope; v3 (DESIGN.md §14) adds the
+per-entry ``family`` field for the heterogeneous kernel zoo.  Loading is
+backward compatible with version-appropriate trust:
+
+- a bare v1 blob parses, but its entries were tuned on a pre-split-K
+  search space — stale, so they are **discarded** with a warning and
+  re-tuned lazily;
+- a v2 blob's entries were tuned on the *same GEMM search space* v3
+  uses (v3 only widened the schema to non-GEMM families), so they are
+  **preserved bitwise** with the family defaulting to ``"gemm"`` — a
+  migration warning notes the rewrite that the next `save` performs.
 """
 from __future__ import annotations
 
@@ -26,12 +32,13 @@ from typing import Dict, Optional, Sequence
 
 from repro.core.cost_model import DEFAULT_SPEC, TPUSpec
 from repro.core.gemm_desc import GemmDesc
-from repro.core.tuner import CDS, GOEntry, tune_gemm
+from repro.core.tuner import CDS, GOEntry, tune_gemm, tune_op
 from repro.kernels.gemm.ops import TileConfig
 
 # Bump whenever the persisted format OR the tuning search space changes in
-# a way that invalidates stored entries (v2: split-K axis + bm 8-32 rows).
-SCHEMA_VERSION = 2
+# a way that invalidates stored entries (v2: split-K axis + bm 8-32 rows;
+# v3: per-entry kernel family — v2 GEMM entries stay valid).
+SCHEMA_VERSION = 3
 
 
 def _tile_to_list(t: TileConfig) -> list[int]:
@@ -59,35 +66,43 @@ class GOLibrary:
             self.load(self.path)
 
     # -------------------------------------------------------------- access
-    def get(self, desc: GemmDesc) -> GOEntry:
+    def get(self, desc) -> GOEntry:
+        """GO entry for any `OpDesc` family — GEMMs take the batched
+        `tune_gemm` path, other families `tune_op` (§14)."""
         key = desc.key()
         with self._lock:
             e = self._entries.get(key)
         if e is not None:
             return e
-        e = tune_gemm(desc, self.spec)
+        e = (tune_gemm(desc, self.spec) if isinstance(desc, GemmDesc)
+             else tune_op(desc, self.spec))
         with self._lock:
             self._entries.setdefault(key, e)
         return self._entries[key]
 
-    def tile(self, desc: GemmDesc, cd: int = 1) -> TileConfig:
+    def tile(self, desc, cd: int = 1) -> TileConfig:
         return self.get(desc).tile_for_cd(cd)
 
-    def prewarm(self, descs: Sequence[GemmDesc]) -> int:
+    def prewarm(self, descs: Sequence) -> int:
         """Tune ahead of traffic (DESIGN.md §10): the serving runtime calls
-        this with the GEMMs a workload is about to issue so the one-time RC
-        tuning cost never lands on a live request.  Missing entries are
+        this with the ops a workload is about to issue so the one-time RC
+        tuning cost never lands on a live request.  Missing GEMMs are
         tuned in ONE `tune_gemm_batch` sweep (the whole pool broadcasts
-        through the cost model, DESIGN.md §13).  Returns the number of
-        newly tuned entries."""
+        through the cost model, DESIGN.md §13); other families go through
+        `tune_op` per descriptor (their tile spaces are tiny, §14).
+        Returns the number of newly tuned entries."""
         from repro.core.tuner import tune_gemm_batch
 
         with self._lock:
-            missing: Dict[str, GemmDesc] = {
+            missing: Dict[str, object] = {
                 d.key(): d for d in descs if d.key() not in self._entries
             }
         if missing:
-            entries = tune_gemm_batch(list(missing.values()), self.spec)
+            gemms = [d for d in missing.values() if isinstance(d, GemmDesc)]
+            others = [d for d in missing.values()
+                      if not isinstance(d, GemmDesc)]
+            entries = tune_gemm_batch(gemms, self.spec)
+            entries += [tune_op(d, self.spec) for d in others]
             with self._lock:
                 for e in entries:
                     self._entries.setdefault(e.desc_key, e)
@@ -109,6 +124,7 @@ class GOLibrary:
             "schema": SCHEMA_VERSION,
             "entries": {
                 k: {
+                    "family": e.family,
                     "isolated": _tile_to_list(e.isolated),
                     "go": {str(cd): _tile_to_list(t) for cd, t in e.go.items()},
                     "rc_source": e.rc_source,
@@ -122,19 +138,21 @@ class GOLibrary:
         tmp.replace(path)
 
     def load(self, path: str | os.PathLike) -> int:
-        """Parse a v1 or v2 blob; returns the file's schema version.
+        """Parse a v1, v2, or v3 blob; returns the file's schema version.
 
-        Entries from a stale schema are *discarded* (they were tuned on an
-        older search space and would mis-plan, DESIGN.md §13) — the library
-        re-tunes lazily and the next `save` rewrites the file at the
-        current schema."""
+        v1 entries are *discarded* (tuned on the pre-split-K search space
+        — they would mis-plan, DESIGN.md §13) and re-tuned lazily.  v2
+        entries are *preserved bitwise* under the family default
+        ``"gemm"`` (v3 changed the envelope, not the GEMM search space,
+        DESIGN.md §14) — a migration warning notes that the next `save`
+        rewrites the file at v3."""
         blob = json.loads(Path(path).read_text())
         if isinstance(blob, dict) and "schema" in blob:
             schema, entries = int(blob["schema"]), blob["entries"]
         else:
             schema, entries = 1, blob           # bare v1 mapping
         self.loaded_schema = schema
-        if schema < SCHEMA_VERSION:
+        if schema < 2:
             warnings.warn(
                 f"GO library {path} has stale schema v{schema} (< "
                 f"v{SCHEMA_VERSION}); discarding {len(entries)} entries — "
@@ -142,6 +160,14 @@ class GOLibrary:
                 stacklevel=2,
             )
             return schema
+        if schema < SCHEMA_VERSION:
+            warnings.warn(
+                f"GO library {path} has schema v{schema} (< "
+                f"v{SCHEMA_VERSION}); migrating {len(entries)} entries "
+                "in place (GEMM family default) — the next save rewrites "
+                f"the file at v{SCHEMA_VERSION}.",
+                stacklevel=2,
+            )
         for k, v in entries.items():
             self._entries[k] = GOEntry(
                 desc_key=k,
@@ -149,6 +175,7 @@ class GOLibrary:
                 go={int(cd): _tile_from_list(t) for cd, t in v["go"].items()},
                 rc_source={int(c): s for c, s in v.get("rc_source", {}).items()},
                 speedup={int(c): s for c, s in v.get("speedup", {}).items()},
+                family=v.get("family", "gemm"),
             )
         return schema
 

@@ -1,0 +1,219 @@
+"""Heterogeneous op descriptors — the unified unit GOLDYLOC tunes,
+predicts, and schedules across the full kernel zoo (DESIGN.md §14).
+
+The paper exercises its claim on GEMMs; the repo's serve loops run
+flash-attention, grouped-GEMM (MoE experts), and mamba-scan kernels
+*alongside* those GEMMs every decode step.  This module is the protocol
+that lets the concurrency core see all four families:
+
+- `GemmDesc` (in `core/gemm_desc.py`) — family ``"gemm"``;
+- `AttentionDesc` — flash attention, O(Sq·Skv) with causal credit;
+- `GroupedGemmDesc` — a ragged expert pool (MoE routed FFNs);
+- `ScanDesc` — chunked SSD scan, bandwidth-bound with a sequential
+  chunk sweep.
+
+Every descriptor is a frozen dataclass exposing the same protocol the
+rest of the core consumes:
+
+``family``      one of `FAMILIES`;
+``key()``       stable string id (family-prefixed for non-GEMMs, so GO
+                library keys and compatibility classes never collide
+                with GEMM keys);
+``flops``       algorithmic FLOPs (padded FLOPs are the cost model's
+                job);
+``in_bytes``    element width of the streamed operands;
+``dtype``       "bf16" | "f32" | "f16";
+``M``           row-like work dimension (canonical queue ordering);
+``mnk_like``    (M, N, K)-shaped size triple for the predictor's
+                log2-dim features (DESIGN.md §4/§14).
+
+`op_from_key` inverts `key()` for every family (ragged row vectors
+round-trip exactly).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+from repro.core.gemm_desc import DTYPE_BYTES, GemmDesc
+
+FAMILIES = ("gemm", "grouped_gemm", "flash_attention", "mamba_scan")
+
+
+def family_of(d) -> str:
+    """Kernel family of a descriptor; plain `GemmDesc` is ``"gemm"``."""
+    return getattr(d, "family", "gemm")
+
+
+@dataclass(frozen=True, order=True)
+class AttentionDesc:
+    """One flash-attention launch: (B, Hq) × Sq query rows attending to
+    Skv keys of head dim D.  ``causal`` assumes the decode-style suffix
+    alignment (q_offset = Skv - Sq), which is what the serve loops issue.
+    """
+
+    B: int
+    Hq: int
+    Hkv: int
+    Sq: int
+    Skv: int
+    D: int
+    causal: bool = True
+    dtype: str = "bf16"
+
+    family = "flash_attention"
+
+    @property
+    def causal_credit(self) -> float:
+        """Fraction of the Sq × Skv score matrix actually computed: the
+        block-sparse causal iteration skips masked kv blocks, so a full
+        prefill (Sq = Skv) pays ~half and a decode step (Sq = 1) pays
+        everything.  Exact count under the suffix alignment
+        (q_offset = Skv − Sq): row i sees max(Skv − Sq + i + 1, 0) keys,
+        so the credit stays in (0, 1] even for the degenerate Sq > Skv
+        shapes (early rows fully masked)."""
+        if not self.causal or self.Skv <= 1:
+            return 1.0
+        over = max(self.Skv - self.Sq, 0)
+        valid = (self.Skv * (self.Skv + 1) - over * (over + 1)) / 2.0
+        return max(valid / (self.Sq * self.Skv), 1.0 / (self.Sq * self.Skv))
+
+    @property
+    def flops(self) -> int:
+        # QK^T + PV, causal-credited.
+        return int(4 * self.B * self.Hq * self.Sq * self.Skv * self.D
+                   * self.causal_credit)
+
+    @property
+    def in_bytes(self) -> int:
+        return DTYPE_BYTES[self.dtype]
+
+    @property
+    def M(self) -> int:
+        return self.B * self.Sq
+
+    @property
+    def mnk_like(self) -> Tuple[int, int, int]:
+        return (self.B * self.Sq, self.Hq * self.D, self.Skv)
+
+    def key(self) -> str:
+        return (f"fa_{self.B}_{self.Hq}_{self.Hkv}_{self.Sq}_{self.Skv}_"
+                f"{self.D}_{int(self.causal)}_{self.dtype}")
+
+
+@dataclass(frozen=True, order=True)
+class GroupedGemmDesc:
+    """A ragged expert pool: G independent GEMMs sharing (K, N) weights
+    shapes but with per-expert row counts — the MoE routed-FFN launch.
+
+    ``rows`` is the per-expert row vector; omitted means the M total is
+    spread uniformly (the cost model's default routing assumption)."""
+
+    G: int
+    M: int                 # total rows across experts
+    N: int
+    K: int
+    dtype: str = "bf16"
+    rows: Tuple[int, ...] = ()
+
+    family = "grouped_gemm"
+
+    def __post_init__(self):
+        if self.rows:
+            assert len(self.rows) == self.G and sum(self.rows) == self.M, (
+                "rows must have one entry per expert summing to M")
+
+    def row_vector(self) -> Tuple[int, ...]:
+        if self.rows:
+            return self.rows
+        base, extra = divmod(self.M, self.G)
+        return tuple(base + (1 if g < extra else 0) for g in range(self.G))
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.M * self.N * self.K
+
+    @property
+    def in_bytes(self) -> int:
+        return DTYPE_BYTES[self.dtype]
+
+    @property
+    def mnk_like(self) -> Tuple[int, int, int]:
+        return (self.M, self.N, self.K)
+
+    def key(self) -> str:
+        r = ("_r" + "-".join(str(x) for x in self.rows)) if self.rows else ""
+        return f"gg_{self.G}_{self.M}_{self.N}_{self.K}_{self.dtype}{r}"
+
+
+@dataclass(frozen=True, order=True)
+class ScanDesc:
+    """One chunked SSD scan launch: B × H sequences of length T with
+    head dim P and state dim N.  The chunk grid is sequential per
+    (batch, head) — the "sequential-k" of the scan family — and the
+    kernel stages everything in f32 (`kernels/mamba_scan`)."""
+
+    B: int
+    T: int
+    H: int
+    P: int
+    N: int
+    dtype: str = "bf16"
+
+    family = "mamba_scan"
+
+    @property
+    def flops(self) -> int:
+        # per chunk of length L: CB^T (2L²N) + (G∘dec)·xd (2L²P) +
+        # C·S_prev + state update (4LNP); summed over chunks this is
+        # T·(2·L·(N+P) + 4·N·P) — L-dependent, so report the L-free
+        # algorithmic core here and let the cost model charge the
+        # chunk-quantized padded figure.
+        return int(self.B * self.H * self.T * 4 * self.N * self.P)
+
+    @property
+    def in_bytes(self) -> int:
+        # The kernel stages inputs/outputs in f32 regardless of the
+        # model dtype (see `kernels/mamba_scan/ops.py:_ssd`).
+        return 4
+
+    @property
+    def compute_dtype(self) -> str:
+        """MXU issue dtype — f32 for the same staging reason, so the
+        roofline charges the f32 peak, not the model dtype's."""
+        return "f32"
+
+    @property
+    def M(self) -> int:
+        return self.B * self.T
+
+    @property
+    def mnk_like(self) -> Tuple[int, int, int]:
+        return (self.B * self.T, self.H * self.P, self.N)
+
+    def key(self) -> str:
+        return f"ms_{self.B}_{self.T}_{self.H}_{self.P}_{self.N}_{self.dtype}"
+
+
+OpDesc = object  # structural protocol: GemmDesc | AttentionDesc | ...
+
+
+def op_from_key(key: str):
+    """Inverse of ``key()`` for every family (GEMM keys have no family
+    prefix, matching `GemmDesc.from_key`)."""
+    if key.startswith("fa_"):
+        p = key.split("_")
+        return AttentionDesc(int(p[1]), int(p[2]), int(p[3]), int(p[4]),
+                             int(p[5]), int(p[6]), bool(int(p[7])), p[8])
+    if key.startswith("gg_"):
+        p = key.split("_")
+        rows: Tuple[int, ...] = ()
+        if len(p) > 6 and p[6].startswith("r"):
+            rows = tuple(int(x) for x in p[6][1:].split("-"))
+        return GroupedGemmDesc(int(p[1]), int(p[2]), int(p[3]), int(p[4]),
+                               p[5], rows)
+    if key.startswith("ms_"):
+        p = key.split("_")
+        return ScanDesc(int(p[1]), int(p[2]), int(p[3]), int(p[4]),
+                        int(p[5]), p[6])
+    return GemmDesc.from_key(key)

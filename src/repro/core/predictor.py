@@ -37,14 +37,19 @@ from repro.core.tuner import CDS
 CLASSES = (1,) + tuple(CDS)  # 1S, 2P, 4P, 8P, 16P
 
 
-def gemm_features(
-    desc: GemmDesc, lib: GOLibrary, spec: TPUSpec = DEFAULT_SPEC
+def op_features(
+    desc, lib: GOLibrary, spec: TPUSpec = DEFAULT_SPEC
 ) -> np.ndarray:
-    """Feature vector (3 + 3·|CDS| dims; 15 by default): log2(M,N,K) +
-    per-CD (log2 #WGs, occupancy, log2 #waves) — see DESIGN.md §4.
+    """Family-generic feature vector (3 + 3·|CDS| dims; 15 by default):
+    log2 of the family's (M, N, K)-like size triple (`OpDesc.mnk_like` —
+    for a GEMM literally M, N, K) + per-CD (log2 #WGs, occupancy,
+    log2 #waves) of the GO kernels — see DESIGN.md §4/§14.  The layout is
+    family-independent, so one predictor serves the whole kernel zoo.
     All CDs' kernel stats come from ONE batched model call."""
     entry = lib.get(desc)
-    feats = [math.log2(desc.M), math.log2(desc.N), math.log2(desc.K)]
+    m, n, k = desc.mnk_like
+    feats = [math.log2(max(m, 1)), math.log2(max(n, 1)),
+             math.log2(max(k, 1))]
     st = kernel_stats_batch(
         desc,
         TileBatch.from_tiles([entry.tile_for_cd(cd) for cd in CDS]),
@@ -59,6 +64,14 @@ def gemm_features(
             math.log2(max(float(st.waves[i]), 1e-6)),
         ]
     return np.asarray(feats, np.float32)
+
+
+def gemm_features(
+    desc: GemmDesc, lib: GOLibrary, spec: TPUSpec = DEFAULT_SPEC
+) -> np.ndarray:
+    """GEMM feature vector — the historical name; `op_features` is the
+    family-generic path and produces identical values for GEMMs."""
+    return op_features(desc, lib, spec)
 
 
 @dataclass

@@ -43,7 +43,8 @@ from repro.core.cost_model import (
 )
 from repro.core.gemm_desc import GemmDesc
 from repro.core.library import GOLibrary, default_library
-from repro.core.predictor import CLASSES, Predictor, gemm_features
+from repro.core.op_desc import family_of
+from repro.core.predictor import CLASSES, Predictor, op_features
 from repro.kernels.gemm.ops import TileConfig, gemm
 from repro.kernels.grouped_gemm import grouped_gemm, ragged_gemm
 
@@ -53,10 +54,20 @@ CP_OVERHEAD_S = 8e-6
 
 @dataclass
 class GemmRequest:
+    """One op ticket.  ``desc`` is any `OpDesc` (GEMMs carry operands in
+    ``a``/``b``; non-GEMM families carry theirs in ``inputs``, in the
+    positional order of the family op — see §14)."""
+
     desc: GemmDesc
     a: Optional[jax.Array] = None
     b: Optional[jax.Array] = None
     tag: str = ""
+    inputs: Optional[tuple] = None
+
+
+# Non-GEMM requests are the same record; the alias marks intent at call
+# sites that submit heterogeneous ops.
+OpRequest = GemmRequest
 
 
 @dataclass
@@ -64,8 +75,11 @@ class GroupPlan:
     indices: List[int]            # queue positions executed in this launch
     cd: int                       # concurrency degree of the launch
     tile: TileConfig
-    mode: str                     # "grouped" | "ragged" | "single" | "fused"
+    mode: str            # "grouped" | "ragged" | "single" | "fused" | "mixed"
     modeled_time_s: float
+    # per-member tiles for heterogeneous ("mixed") launches, aligned with
+    # ``indices``; None for single-tile modes.
+    tiles: Optional[List[TileConfig]] = None
 
 
 @dataclass
@@ -78,8 +92,12 @@ class Schedule:
         return sum(g.modeled_time_s for g in self.groups)
 
 
-def _compatible(a: GemmDesc, b: GemmDesc) -> bool:
-    """Groupable in one ragged launch: same K/N/transposes/dtype, any M."""
+def _compatible(a, b) -> bool:
+    """Groupable in one ragged launch: same K/N/transposes/dtype, any M.
+    Only plain GEMMs qualify — other families pool with *identical*
+    descriptors only (the `same` branch of `plan_group`)."""
+    if not (isinstance(a, GemmDesc) and isinstance(b, GemmDesc)):
+        return False
     return (
         a.N == b.N and a.K == b.K and a.ta == b.ta and a.tb == b.tb
         and a.dtype == b.dtype and a.batch == b.batch == 1
@@ -87,15 +105,21 @@ def _compatible(a: GemmDesc, b: GemmDesc) -> bool:
 
 
 @functools.lru_cache(maxsize=65536)
-def compat_key(d: GemmDesc) -> str:
+def compat_key(d) -> str:
     """Compatibility-class id: equal keys ⟺ plannable in one launch (§6.7).
 
     For plain GEMMs (batch == 1) equal keys coincide with `_compatible`.
     Batched GEMMs (§6.7 B-GEMM) class by their full key: they only pool
     with *identical* descriptors (the `same` branch of `plan_group`, which
-    `_compatible` deliberately excludes).  Memoized (`GemmDesc` is frozen)
-    so admission-time classification is a dict probe — part of the
-    runtime's O(µs) dispatch path (DESIGN.md §10)."""
+    `_compatible` deliberately excludes).  Non-GEMM op families (§14)
+    likewise class by their family-prefixed full key — classes never
+    straddle families, so adding an op to a bundle cannot perturb the
+    §6.7 class of its GEMM-only subset (property-tested in
+    `tests/test_mixed_ops.py`).  Memoized (descriptors are frozen) so
+    admission-time classification is a dict probe — part of the runtime's
+    O(µs) dispatch path (DESIGN.md §10)."""
+    if family_of(d) != "gemm":
+        return d.key()
     if d.batch != 1:
         return d.key()
     return f"{d.N}_{d.K}_{int(d.ta)}{int(d.tb)}_{d.dtype}"
@@ -134,15 +158,15 @@ class ConcurrencyController:
             self.predictor.invalidate_cache()
 
     # ------------------------------------------------------------ predict
-    def _features(self, desc: GemmDesc):
+    def _features(self, desc):
         key = desc.key()
         x = self._feat_cache.get(key)
         if x is None:
-            x = gemm_features(desc, self.lib, self.spec)
+            x = op_features(desc, self.lib, self.spec)
             self._feat_cache[key] = x
         return x
 
-    def preferred_cd(self, desc: GemmDesc, available: int) -> int:
+    def preferred_cd(self, desc, available: int) -> int:
         if available <= 1:
             return 1
         floor = max(c for c in CLASSES if c <= available)
@@ -205,11 +229,18 @@ class ConcurrencyController:
             mode = "single"
             t = isolated_time(head, self.lib.get(head).isolated, self.spec)
             tile = self.lib.get(head).isolated
+        elif family_of(head) != "gemm":
+            # A pool of identical non-GEMM ops is a concurrent group of
+            # independent launches (no single fused kernel exists for
+            # them) — plan it through the mixed path's per-member model.
+            mode = "mixed"
+            t = group_time(members, self.spec)
         else:
             mode = "ragged" if hetero else "grouped"
             t = group_time(members, self.spec)
         gp = GroupPlan(indices=take, cd=cd_exec, tile=tile, mode=mode,
-                       modeled_time_s=t)
+                       modeled_time_s=t,
+                       tiles=[tile] * cd_exec if mode == "mixed" else None)
         taken = set(take)
         return gp, [i for i in pending if i not in taken]
 
@@ -221,6 +252,65 @@ class ConcurrencyController:
         while pending:
             gp, pending = self.plan_group(descs, pending, available=available)
             sched.groups.append(gp)
+        return sched
+
+    # ------------------------------------------------- mixed-family plan
+    def plan_mixed(
+        self, descs: Sequence, available: int | None = None
+    ) -> Schedule:
+        """Co-schedule a heterogeneous decode bundle (§14).
+
+        §6.7 pools only same-class GEMMs into one *launch*; a decode
+        step's bundle is different — its QKV GEMMs, attention, MoE
+        grouped-GEMM, and scan are distinct kernels that can run
+        *concurrently* on resource shares (the ACS setting: concurrent
+        heterogeneous, input-dependent kernels).  Per-class preferred-CD
+        votes mislead here — a memory-bound scan that gains little from
+        self-concurrency still fills a compute-bound GEMM's bandwidth
+        bubbles — so the concurrency degree is chosen by evaluating the
+        mixed pool directly under the cost model: every §5 class-size
+        chunking of the bundle is modeled and the fastest wins
+        (CD_exec = min(best chunk, available)).  The whole decision is
+        plan-cached by the runtime, so steady-state bundles skip it
+        entirely (DESIGN.md §10/§13)."""
+        sched = Schedule(cp_overhead_s=CP_OVERHEAD_S)
+        n = len(descs)
+        if n == 0:
+            return sched
+        cap = self.max_cd if available is None else max(
+            1, min(self.max_cd, available))
+        entries = [self.lib.get(d) for d in descs]
+
+        def chunk_groups(size: int) -> List[GroupPlan]:
+            groups = []
+            for lo in range(0, n, size):
+                take = list(range(lo, min(lo + size, n)))
+                cd_exec = len(take)
+                if cd_exec == 1:
+                    i = take[0]
+                    groups.append(GroupPlan(
+                        indices=take, cd=1, tile=entries[i].isolated,
+                        mode="single",
+                        modeled_time_s=isolated_time(
+                            descs[i], entries[i].isolated, self.spec)))
+                    continue
+                tiles = [
+                    entries[i].tile_for_cd(cd_exec) if self.go_tiles
+                    else entries[i].isolated
+                    for i in take
+                ]
+                members = [(descs[i], t) for i, t in zip(take, tiles)]
+                groups.append(GroupPlan(
+                    indices=take, cd=cd_exec, tile=tiles[0], mode="mixed",
+                    modeled_time_s=group_time(members, self.spec),
+                    tiles=tiles))
+            return groups
+
+        sizes = sorted({c for c in CLASSES if c <= min(n, cap)} | {1}
+                       | ({min(n, cap)} if min(n, cap) > 1 else set()))
+        best = min((chunk_groups(s) for s in sizes),
+                   key=lambda gs: sum(g.modeled_time_s for g in gs))
+        sched.groups = best
         return sched
 
     # ---------------------------------------------------- fusion policy
@@ -258,7 +348,18 @@ class ConcurrencyController:
         outs: List[Optional[jax.Array]] = [None] * len(requests)
         for gp in sched.groups:
             reqs = [requests[i] for i in gp.indices]
-            if gp.mode == "single" or len(reqs) == 1:
+            if gp.mode == "mixed":
+                # Heterogeneous concurrent group: members are distinct
+                # kernels; execute each through its family op at the
+                # group's per-member GO tile (§14).  On real hardware
+                # these dispatch concurrently; here correctness rides the
+                # sequential member loop while latency is modeled.
+                tiles = gp.tiles or [gp.tile] * len(gp.indices)
+                for tile, i in zip(tiles, gp.indices):
+                    outs[i] = _run_op(requests[i], tile, interpret)
+            elif gp.mode == "single" and family_of(reqs[0].desc) != "gemm":
+                outs[gp.indices[0]] = _run_op(reqs[0], gp.tile, interpret)
+            elif gp.mode == "single" or len(reqs) == 1:
                 r = reqs[0]
                 outs[gp.indices[0]] = gemm(
                     r.a, r.b, ta=r.desc.ta, tb=r.desc.tb, tile=gp.tile,
@@ -299,3 +400,36 @@ def _as_mk(r: GemmRequest) -> jax.Array:
 
 def _as_kn(r: GemmRequest) -> jax.Array:
     return r.b.T if r.desc.tb else r.b
+
+
+def _run_op(r: GemmRequest, tile: TileConfig, interpret: bool | None):
+    """Execute one member of a mixed group through its family op (§14).
+
+    Returns None when the request carries no operands (shadow dispatch).
+    Family adapters live next to their kernels
+    (`kernels/*/ops.py:*_for_desc`), imported lazily to keep module load
+    GEMM-only for the common path."""
+    fam = family_of(r.desc)
+    if fam == "gemm":
+        if r.a is None or r.b is None:
+            return None
+        return gemm(r.a, r.b, ta=r.desc.ta, tb=r.desc.tb, tile=tile,
+                    interpret=interpret)
+    if r.inputs is None:
+        return None
+    if fam == "flash_attention":
+        from repro.kernels.flash_attention.ops import attention_for_desc
+
+        return attention_for_desc(r.desc, *r.inputs, tile=tile,
+                                  interpret=interpret)
+    if fam == "grouped_gemm":
+        from repro.kernels.grouped_gemm.ops import grouped_for_desc
+
+        return grouped_for_desc(r.desc, *r.inputs, tile=tile,
+                                interpret=interpret)
+    if fam == "mamba_scan":
+        from repro.kernels.mamba_scan.ops import scan_for_desc
+
+        return scan_for_desc(r.desc, *r.inputs, tile=tile,
+                             interpret=interpret)
+    raise ValueError(f"unknown op family: {fam}")

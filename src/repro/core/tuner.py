@@ -35,15 +35,18 @@ from repro.core.cost_model import (
     DescBatch,
     TileBatch,
     TPUSpec,
+    group_time,
     group_time_batch,
     group_time_ref,
     isolated_time,
     isolated_time_batch,
     isolated_time_ref,
     kernel_stats,
+    op_tile_ws,
     tile_precompute,
 )
 from repro.core.gemm_desc import GemmDesc
+from repro.core.op_desc import family_of
 from repro.kernels.gemm.ops import TileConfig
 
 CDS = (2, 4, 8, 16)
@@ -78,6 +81,44 @@ FALLBACK_TILE = TileConfig(128, 128, 128)
 
 _SEARCH = TileBatch.from_tiles(CANDIDATE_TILES)
 
+# ------------------------------------------- family tile axes (§14)
+# Non-GEMM families reuse the `TileConfig` container with family-specific
+# axis meanings (documented per space) so GO-library persistence, the
+# schema, and the batched cost model stay uniform across the zoo.
+
+# flash attention: bm = q block, bn = kv block (bk unused).  Small q
+# blocks are the decode shapes (Sq·B rows); the kv axis trades K/V
+# re-reads against the per-instance working set under a CD's VMEM share.
+ATTENTION_TILES: tuple[TileConfig, ...] = tuple(
+    TileConfig(bq, bkv, 128)
+    for bq in (8, 64, 128, 256)
+    for bkv in (128, 256, 512)
+)
+
+# grouped (ragged MoE) GEMM: same meaning as the GEMM axes; bm rows 8-64
+# dominate because per-expert row counts are tiny at decode time and the
+# ragged launch pads every expert up to bm.
+GROUPED_TILES: tuple[TileConfig, ...] = tuple(
+    TileConfig(bm, bn, bk)
+    for bm in (8, 16, 32, 64, 128)
+    for bn in (128, 256, 512)
+    for bk in (128, 256, 512)
+)
+
+# mamba/SSD scan: bm = chunk length L (bn/bk unused).  Long chunks
+# amortize the sequential sweep, short ones shrink the working set —
+# exactly the trade a shrinking CD share re-decides.
+SCAN_TILES: tuple[TileConfig, ...] = tuple(
+    TileConfig(c, 128, 128) for c in (32, 64, 128, 256, 512)
+)
+
+FAMILY_TILES = {
+    "gemm": CANDIDATE_TILES,
+    "grouped_gemm": GROUPED_TILES,
+    "flash_attention": ATTENTION_TILES,
+    "mamba_scan": SCAN_TILES,
+}
+
 
 @dataclass
 class GOEntry:
@@ -88,6 +129,7 @@ class GOEntry:
     go: Dict[int, TileConfig] = field(default_factory=dict)
     rc_source: Dict[int, str] = field(default_factory=dict)  # CD -> RC name
     speedup: Dict[int, float] = field(default_factory=dict)  # CD -> modeled
+    family: str = "gemm"    # kernel family (OpDesc protocol, §14)
 
     def tile_for_cd(self, cd: int) -> TileConfig:
         """GO tile for the largest tuned CD ≤ ``cd``; a ``cd`` below the
@@ -253,6 +295,47 @@ def tune_gemm(
     """Vectorized Step ① + Step ② for one GEMM.  ``tiles``/``split_ks``
     override the search space (benchmarks replay the legacy space)."""
     return tune_gemm_batch([desc], spec, cds, tiles, split_ks)[0]
+
+
+def tune_op(
+    desc,
+    spec: TPUSpec = DEFAULT_SPEC,
+    cds: Sequence[int] = CDS,
+) -> GOEntry:
+    """RC tuning for *any* kernel family (§14): the same two-step GOLDYLOC
+    pipeline — Step ① best tile per RC fraction on the family's tile axes,
+    Step ② grouped-execution benchmark of the RC winners per CD — run
+    against the family's cost model via the `kernel_stats_batch` dispatch.
+    GEMMs keep their fully-batched path (split-K axis included)."""
+    fam = family_of(desc)
+    if fam == "gemm":
+        return tune_gemm(desc, spec, cds)
+    search = TileBatch.from_tiles(FAMILY_TILES[fam])
+    ws_raw = np.asarray(op_tile_ws(desc, search, spec))
+    winners: Dict[str, TileConfig] = {}
+    for name, frac in RC_FRACTIONS.items():
+        budget = int(spec.vmem_bytes * frac)
+        feasible = ws_raw <= budget
+        if not feasible.any():
+            winners[name] = FALLBACK_TILE
+            continue
+        times = isolated_time_batch(
+            desc, search, spec, vmem_budget=budget, bw_frac=frac)
+        winners[name] = search.tile(
+            int(np.where(feasible, times, np.inf).argmin()))
+    entry = GOEntry(desc_key=desc.key(), isolated=winners["GPU"], family=fam)
+    seq_1 = isolated_time(desc, entry.isolated, spec)
+    cand = list(winners.items())
+    for cd in cds:
+        best_name, best_tile, best_t = None, None, float("inf")
+        for name, tile in cand:
+            t = group_time([(desc, tile)] * cd, spec)
+            if t < best_t:
+                best_name, best_tile, best_t = name, tile, t
+        entry.go[cd] = best_tile
+        entry.rc_source[cd] = best_name
+        entry.speedup[cd] = (seq_1 * cd) / best_t
+    return entry
 
 
 # ----------------------------------------------------- scalar reference

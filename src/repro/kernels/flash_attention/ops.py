@@ -3,6 +3,12 @@
 Forward = pallas kernel (TPU / interpret), backward = VJP of the chunked
 reference (numerically matched: both use online softmax in f32).  Off-TPU the
 chunked reference runs both directions.
+
+The q/kv block sizes are the family's tunable tile axes (DESIGN.md §14):
+``bq``/``bkv`` thread through to the kernel grid, and
+`attention_for_desc` adapts a GO-library `TileConfig` (bm → bq, bn → bkv)
+so the concurrency scheduler can execute an `AttentionDesc` member of a
+mixed group at its tuned GO tile.
 """
 from __future__ import annotations
 
@@ -16,20 +22,20 @@ from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import flash_ref
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
-def _flash(q, k, v, causal, window, scale, q_offset, interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _flash(q, k, v, causal, window, scale, q_offset, interpret, bq, bkv):
     return flash_attention_pallas(
         q, k, v, causal=causal, window=window, scale=scale,
-        q_offset=q_offset, interpret=interpret,
+        q_offset=q_offset, bq=bq, bkv=bkv, interpret=interpret,
     )
 
 
-def _flash_fwd(q, k, v, causal, window, scale, q_offset, interpret):
-    out = _flash(q, k, v, causal, window, scale, q_offset, interpret)
+def _flash_fwd(q, k, v, causal, window, scale, q_offset, interpret, bq, bkv):
+    out = _flash(q, k, v, causal, window, scale, q_offset, interpret, bq, bkv)
     return out, (q, k, v)
 
 
-def _flash_bwd(causal, window, scale, q_offset, interpret, res, g):
+def _flash_bwd(causal, window, scale, q_offset, interpret, bq, bkv, res, g):
     q, k, v = res
     _, vjp = jax.vjp(
         lambda q, k, v: flash_ref(
@@ -51,6 +57,8 @@ def flash_attention(
     window: int = 0,
     scale: float | None = None,
     q_offset: int = 0,
+    bq: int = 128,
+    bkv: int = 128,
     interpret: bool | None = None,
     force_ref: bool = False,
 ):
@@ -64,6 +72,26 @@ def flash_attention(
         # MLA-style dv != dqk: zero-pad V, slice the output.
         dv, dq = v.shape[-1], q.shape[-1]
         v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dq - dv)))
-        out = _flash(q, k, v, causal, window, scale, q_offset, interp)
+        out = _flash(q, k, v, causal, window, scale, q_offset, interp,
+                     bq, bkv)
         return out[..., :dv]
-    return _flash(q, k, v, causal, window, scale, q_offset, interp)
+    return _flash(q, k, v, causal, window, scale, q_offset, interp, bq, bkv)
+
+
+def attention_for_desc(
+    desc, q, k, v, *, tile=None, interpret: bool | None = None,
+):
+    """Execute the launch an `AttentionDesc` describes (DESIGN.md §14).
+
+    ``tile`` is the GO-library `TileConfig` for the group's concurrency
+    degree: bm is the q block, bn the kv block.  The decode-style suffix
+    alignment (q_offset = Skv - Sq) matches the descriptor's causal-credit
+    assumption."""
+    kw = {}
+    if tile is not None:
+        kw = {"bq": max(8, min(tile.bm, 512)),
+              "bkv": max(128, min(tile.bn, 512))}
+    return flash_attention(
+        q, k, v, causal=desc.causal, q_offset=desc.Skv - desc.Sq,
+        interpret=interpret, **kw,
+    )

@@ -3,6 +3,9 @@
 ``grouped_gemm`` executes a concurrency group of G homogeneous GEMMs at the
 tile config the GO-library selected for CD=G.  ``ragged_gemm`` is the
 heterogeneous/MoE form: per-group row counts, shared N/K.
+``grouped_for_desc`` adapts a `GroupedGemmDesc` (core/op_desc.py, DESIGN.md
+§14) plus its ragged operands onto ``ragged_gemm`` so the concurrency
+scheduler can execute the MoE expert pool as one member of a mixed group.
 """
 from __future__ import annotations
 
@@ -85,3 +88,42 @@ def ragged_gemm(
         out_dtype=out_dtype, interpret=interp,
     )
     return out[:Mtotal, :N]
+
+
+def grouped_for_desc(
+    desc, a, b, *, tile=None, interpret: bool | None = None,
+):
+    """Execute the ragged expert-pool launch a `GroupedGemmDesc`
+    describes (DESIGN.md §14).
+
+    ``a`` is (M, K) — all experts' rows concatenated in expert order per
+    ``desc.row_vector()``; ``b`` is (G, K, N) expert weights.  Rows are
+    re-packed to the tile's bm blocks for the pallas path (the ref path
+    consumes the raw ragged layout), then un-padded back to desc order.
+    """
+    tile = tile or TileConfig()
+    sizes = desc.row_vector()
+    interp = bool(interpret)
+    if not (use_pallas() or interp):
+        return ragged_gemm_ref(
+            a, b, jnp.asarray(sizes, jnp.int32), out_dtype=a.dtype)
+    bm = tile.bm
+    rows, padded = [], []
+    off = 0
+    for r in sizes:
+        blk = a[off:off + r]
+        pad = (-r) % bm
+        if pad:
+            blk = jnp.pad(blk, ((0, pad), (0, 0)))
+        rows.append(blk)
+        padded.append(r + pad)
+        off += r
+    out = ragged_gemm(
+        jnp.concatenate(rows), b, jnp.asarray(padded, jnp.int32),
+        tile=tile, interpret=interpret,
+    )
+    pieces, off = [], 0
+    for r, p in zip(sizes, padded):
+        pieces.append(out[off:off + r])
+        off += p
+    return jnp.concatenate(pieces)

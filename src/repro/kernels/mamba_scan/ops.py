@@ -2,6 +2,9 @@
 
 ``ssd_scan``         — general gated linear recurrence (powers mLSTM too).
 ``mamba_chunk_scan`` — Mamba2 layout (dt/A, group-shared B/C).
+``scan_for_desc``    — execute the launch a `ScanDesc` (core/op_desc.py,
+                       DESIGN.md §14) describes, with the GO-tuned chunk
+                       length (TileConfig.bm) as the chunk axis.
 """
 from __future__ import annotations
 
@@ -77,6 +80,20 @@ def ssd_scan(
             xd, da, Bm, Cm, chunk=chunk, initial_state=initial_state
         )
     return _ssd(xd, da, Bm, Cm, chunk, interp)
+
+
+def scan_for_desc(
+    desc, xd, da, Bm, Cm, *, tile=None, interpret: bool | None = None,
+):
+    """Execute the SSD-scan launch a `ScanDesc` describes (DESIGN.md §14).
+
+    Operands follow `ssd_scan`'s general layout: xd (B,T,H,P), da (B,T,H),
+    Bm/Cm (B,T,H,N).  ``tile.bm`` is the GO-tuned chunk length; it is
+    clamped to the padded sequence so a decode step (T = 1) stays a
+    single-chunk launch."""
+    chunk = 128 if tile is None else max(8, min(int(tile.bm), 512))
+    y, _ = ssd_scan(xd, da, Bm, Cm, chunk=chunk, interpret=interpret)
+    return y
 
 
 def mamba_chunk_scan(

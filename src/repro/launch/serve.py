@@ -33,6 +33,10 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--runtime", action="store_true",
                     help="shadow-dispatch decode GEMMs via repro.runtime")
+    ap.add_argument("--mixed-ops", action="store_true",
+                    help="with --runtime: co-schedule the full decode op "
+                         "bundle (attention/MoE/scan + GEMMs) as one "
+                         "heterogeneous group (DESIGN.md §14)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -61,6 +65,7 @@ def main(argv=None):
     toks = greedy_decode(
         model, params, prompt, s_max=args.prompt_len + args.gen + 1,
         steps=args.gen, runtime=runtime, tenant=cfg.name,
+        mixed_ops=args.mixed_ops,
     )
     dt = time.time() - t0
     print(f"[serve] {cfg.name}: batch={args.batch} prompt={args.prompt_len} "

@@ -6,17 +6,26 @@ closed-loop replay.  See `benchmarks/serving.py` for the end-to-end loop.
 """
 from repro.runtime.integration import (
     decode_step_descs,
+    decode_step_op_descs,
     decode_step_requests,
     prewarm_decode,
+    submit_decode_bundle,
     submit_decode_step,
 )
-from repro.runtime.runtime import Launch, Runtime, RuntimeConfig, Ticket
+from repro.runtime.runtime import (
+    MIXED_CLASS,
+    Launch,
+    Runtime,
+    RuntimeConfig,
+    Ticket,
+)
 from repro.runtime.telemetry import GroupRecord, Telemetry
 from repro.runtime.traces import bursty_trace, poisson_trace, uniform_trace
 
 __all__ = [
     "Launch", "Runtime", "RuntimeConfig", "Ticket", "GroupRecord",
-    "Telemetry", "bursty_trace", "poisson_trace", "uniform_trace",
-    "decode_step_descs", "decode_step_requests", "prewarm_decode",
+    "Telemetry", "MIXED_CLASS", "bursty_trace", "poisson_trace",
+    "uniform_trace", "decode_step_descs", "decode_step_op_descs",
+    "decode_step_requests", "prewarm_decode", "submit_decode_bundle",
     "submit_decode_step",
 ]

@@ -22,6 +22,7 @@ from dataclasses import replace
 from typing import List, Sequence, Tuple
 
 from repro.core.gemm_desc import GemmDesc
+from repro.core.op_desc import AttentionDesc, GroupedGemmDesc, ScanDesc
 from repro.core.scheduler import ConcurrencyController, GemmRequest
 from repro.runtime.runtime import Runtime, Ticket
 
@@ -117,6 +118,74 @@ def decode_step_requests(
         else:
             reqs += [GemmRequest(desc=d, tag=tag) for d in bundle]
     return reqs
+
+
+def decode_step_op_descs(
+    cfg, batch: int, context: int = 1024, dtype: str = "bf16",
+) -> List[object]:
+    """The FULL decode-step op bundle for one layer of an `ArchConfig` —
+    every kernel family the step actually launches, not just its GEMMs
+    (DESIGN.md §14):
+
+    - the projection/FFN GEMMs of `decode_step_descs`;
+    - the attention read over ``context`` cached tokens
+      (`AttentionDesc`, Sq = 1 per sequence);
+    - the routed-expert pool as ONE ragged grouped-GEMM launch per
+      up/down projection (`GroupedGemmDesc`) — this is the §6.7
+      concurrency pool collapsed into the kernel that actually runs it;
+    - the SSD state update for SSM/hybrid blocks (`ScanDesc`, T = 1).
+
+    This is the heterogeneous pool `Runtime.submit_bundle` co-schedules.
+    """
+    descs: List[object] = [
+        d for _, bundle in decode_step_descs(cfg, batch, dtype)
+        for d in bundle
+    ]
+    if cfg.attn_type == "mla":
+        hd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        descs.append(AttentionDesc(batch, cfg.n_heads, cfg.n_heads, 1,
+                                   context, hd, True, dtype))
+    elif not (cfg.family == "ssm"):
+        hd = cfg.resolved_head_dim
+        descs.append(AttentionDesc(batch, cfg.n_heads, cfg.n_kv_heads, 1,
+                                   context, hd, True, dtype))
+    if cfg.family in ("ssm", "hybrid") and cfg.ssm_state:
+        descs.append(ScanDesc(batch, 1, cfg.ssm_n_heads, cfg.ssm_head_dim,
+                              cfg.ssm_state, dtype))
+    elif cfg.family == "ssm":
+        # xLSTM-style blocks (ssm_state == 0): each mLSTM layer runs two
+        # SSD scans per step — the (N = P = 2D/H) C-matrix recurrence and
+        # the P = 1 normalizer (models/xlstm.py:mlstm_apply).
+        hp = 2 * cfg.d_model // cfg.n_heads
+        descs.append(ScanDesc(batch, 1, cfg.n_heads, hp, hp, dtype))
+        descs.append(ScanDesc(batch, 1, cfg.n_heads, 1, hp, dtype))
+    if cfg.n_routed_experts:
+        # The routed experts as the ragged pool the MoE layer dispatches:
+        # batch·top_k rows spread over the active experts.
+        g = min(cfg.n_routed_experts, max(batch * cfg.moe_top_k, 1))
+        rows = batch * cfg.moe_top_k
+        descs.append(GroupedGemmDesc(g, rows, cfg.moe_d_ff, cfg.d_model,
+                                     dtype))
+        descs.append(GroupedGemmDesc(g, rows, cfg.d_model, cfg.moe_d_ff,
+                                     dtype))
+    return descs
+
+
+def submit_decode_bundle(
+    runtime: Runtime,
+    cfg,
+    batch: int,
+    context: int = 1024,
+    tenant: str = "default",
+    now: float | None = None,
+    dtype: str = "bf16",
+) -> List[Ticket]:
+    """Admit one decode step's FULL op bundle (all kernel families) into
+    the runtime's mixed-bundle queue for co-scheduling (§14)."""
+    return runtime.submit_bundle(
+        decode_step_op_descs(cfg, batch, context, dtype),
+        tenant=tenant, now=now,
+    )
 
 
 def prewarm_decode(

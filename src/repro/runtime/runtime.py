@@ -39,6 +39,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cost_model import EVAL_COUNTER
 from repro.core.gemm_desc import GemmDesc
+from repro.core.op_desc import family_of
 from repro.core.scheduler import (
     CP_OVERHEAD_S,
     ConcurrencyController,
@@ -50,6 +51,13 @@ from repro.core.scheduler import (
 from repro.runtime.telemetry import GroupRecord, Telemetry
 
 Signature = Tuple[Tuple[str, ...], int]
+
+# Class key of the heterogeneous-bundle queue (§14).  The "!" cannot
+# occur in a `compat_key`, so bundle tickets never collide with a
+# per-class GEMM queue; its plan-cache signatures are prefixed with the
+# same marker so a bundle of (say) only GEMMs cannot alias a class
+# queue's cached per-class plan.
+MIXED_CLASS = "mixed!"
 
 
 @dataclass
@@ -177,6 +185,40 @@ class Runtime:
         self.telemetry.record_submit()
         return ticket
 
+    def submit_bundle(
+        self,
+        requests: Sequence,
+        tenant: str = "default",
+        now: float | None = None,
+    ) -> List[Ticket]:
+        """Admit a heterogeneous decode bundle for co-scheduling (§14).
+
+        Unlike `submit`, the ops are NOT split into per-family §6.7
+        class queues: they enter the shared mixed-bundle queue, and
+        `flush` plans that queue through
+        `ConcurrencyController.plan_mixed` — so a decode step's QKV
+        GEMMs, attention, MoE grouped-GEMM, and scan become one (or a
+        few) concurrent groups with the CD decided over the
+        heterogeneous pool.  Same plan cache, same fast path: the bundle
+        signature is canonical, so steady-state traffic replans nothing.
+        """
+        now = self.clock() if now is None else now
+        q = self._queues.get(MIXED_CLASS)
+        if q is None:
+            q = self._queues[MIXED_CLASS] = _ClassQueue()
+            self._order.append(MIXED_CLASS)
+        out: List[Ticket] = []
+        for request in requests:
+            if not isinstance(request, GemmRequest):
+                request = GemmRequest(desc=request)
+            self._seq += 1
+            ticket = Ticket(seq=self._seq, tenant=tenant, request=request,
+                            submit_t=now)
+            q.add(ticket)
+            self.telemetry.record_submit()
+            out.append(ticket)
+        return out
+
     def set_available(self, n: int) -> None:
         """Update live available parallelism (other streams/devices taking
         slots).  Part of the plan-cache key, so stale plans never re-bind."""
@@ -237,6 +279,22 @@ class Runtime:
                     self.telemetry.record_prewarm_plan(CP_OVERHEAD_S)
         return fresh
 
+    def prewarm_bundle(self, descs: Sequence) -> int:
+        """Tune a heterogeneous bundle's ops ahead of traffic and seed the
+        plan cache with its mixed-queue signature (§14) — the bundle
+        analogue of `prewarm`, so the first live decode step is already a
+        cache-hit flush."""
+        descs = list(descs)
+        fresh = self.ctrl.lib.prewarm(descs)
+        if descs:
+            members = self._canonical_sort(descs)
+            _, hit = self._plan_for_keys(
+                (MIXED_CLASS,) + tuple(d.key() for d in members),
+                lambda: members, planner=self.ctrl.plan_mixed)
+            if not hit:
+                self.telemetry.record_prewarm_plan(CP_OVERHEAD_S)
+        return fresh
+
     # -------------------------------------------------------------- flush
     def flush(
         self,
@@ -275,8 +333,14 @@ class Runtime:
             # per-flush signature rebuild (telemetry.sig_resorts counts
             # any future regression to a full re-sort).
             tickets, sig_keys = self._queues[key].take_all()
-            sched, hit = self._plan_for_keys(
-                sig_keys, lambda: [t.desc for t in tickets])
+            if key == MIXED_CLASS:
+                sched, hit = self._plan_for_keys(
+                    (MIXED_CLASS,) + sig_keys,
+                    lambda: [t.desc for t in tickets],
+                    planner=self.ctrl.plan_mixed)
+            else:
+                sched, hit = self._plan_for_keys(
+                    sig_keys, lambda: [t.desc for t in tickets])
             self.telemetry.record_plan(hit, CP_OVERHEAD_S)
             if not hit:
                 planning_s += CP_OVERHEAD_S
@@ -331,16 +395,21 @@ class Runtime:
         return out
 
     # ---------------------------------------------------------- internals
-    def _plan_for_keys(self, keys: tuple, descs_fn) -> tuple[Schedule, bool]:
+    def _plan_for_keys(
+        self, keys: tuple, descs_fn, planner=None,
+    ) -> tuple[Schedule, bool]:
         """Plan-cache probe on a prebuilt canonical key tuple; ``descs_fn``
         materializes the descriptors only on a miss, so a hit touches
-        neither the planner nor the cost model."""
+        neither the planner nor the cost model.  ``planner`` overrides the
+        per-class planner (the mixed-bundle queue plans via
+        `plan_mixed`)."""
         sig: Signature = (keys, self.available)
         cached = self._plan_cache.get(sig)
         if cached is not None:
             self._plan_cache.move_to_end(sig)
             return cached, True
-        sched = self.ctrl.plan(descs_fn(), available=self.available)
+        plan = planner if planner is not None else self.ctrl.plan
+        sched = plan(descs_fn(), available=self.available)
         self._plan_cache[sig] = sched
         while len(self._plan_cache) > self.config.plan_cache_capacity:
             self._plan_cache.popitem(last=False)
@@ -362,9 +431,15 @@ class Runtime:
 
     def _execute(self, launch: Launch) -> Optional[float]:
         reqs = [t.request for t in launch.tickets]
-        if any(r.a is None or r.b is None for r in reqs):
+
+        def has_operands(r) -> bool:
+            if family_of(r.desc) == "gemm":
+                return r.a is not None and r.b is not None
+            return r.inputs is not None
+
+        if any(not has_operands(r) for r in reqs):
             return None
-        if any(r.desc.batch != 1 for r in reqs):
+        if any(getattr(r.desc, "batch", 1) != 1 for r in reqs):
             # B-GEMMs (§6.7) are modeled but have no grouped execute path
             # in the kernels yet — stay in shadow (modeled-only) mode.
             return None

@@ -33,13 +33,18 @@ def make_serve_fns(model: Model) -> Tuple[Callable, Callable]:
 def greedy_decode(
     model: Model, params, prompt_batch, *, s_max: int, steps: int,
     cache_dtype=jnp.float32, runtime: Optional[Any] = None,
-    tenant: str = "default",
+    tenant: str = "default", mixed_ops: bool = False,
 ):
     """Greedy generation for examples/tests (host loop, jitted steps).
 
     ``runtime``: optional `repro.runtime.Runtime`; each decode step's
     QKV/FFN GEMM descriptors are submitted to it and flushed, so the
-    online dynamic logic runs against the live decode load."""
+    online dynamic logic runs against the live decode load.
+
+    ``mixed_ops=True`` widens the shadow dispatch to the step's FULL op
+    bundle — attention, MoE grouped-GEMM, and SSD scan alongside the
+    GEMMs — co-scheduled as one heterogeneous concurrent group via
+    `Runtime.submit_bundle` (DESIGN.md §14)."""
     B = jax.tree.leaves(prompt_batch)[0].shape[0]
     cache = model.init_cache(batch=B, s_max=s_max, dtype=cache_dtype)
     prefill = jax.jit(model.prefill)
@@ -48,8 +53,15 @@ def greedy_decode(
     cache_len = jnp.asarray(length, jnp.int32)
     out = []
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-    step_requests = None
-    if runtime is not None:
+    step_requests = step_bundle = None
+    if runtime is not None and mixed_ops:
+        from repro.runtime import decode_step_op_descs
+        # the op bundle is identical every step — derive once, submit
+        # per step; prewarm seeds both the GO entries and the bundle's
+        # plan-cache signature
+        step_bundle = decode_step_op_descs(model.cfg, B, context=s_max)
+        runtime.prewarm_bundle(step_bundle)
+    elif runtime is not None:
         from repro.runtime import decode_step_requests, prewarm_decode
         prewarm_decode(runtime, model.cfg, batches=[B])
         # the bundle (incl. the §6.11 fusion decision) is identical every
@@ -57,7 +69,9 @@ def greedy_decode(
         step_requests = decode_step_requests(runtime.ctrl, model.cfg, B)
     for _ in range(steps):
         out.append(tok)
-        if step_requests is not None:
+        if step_bundle is not None:
+            runtime.submit_bundle(step_bundle, tenant=tenant)
+        elif step_requests is not None:
             for req in step_requests:
                 runtime.submit(req, tenant=tenant)
         logits, cache, cache_len = decode(params, tok, cache, cache_len)

@@ -1,0 +1,359 @@
+"""Heterogeneous OpDesc protocol + mixed-family scheduling (DESIGN.md §14).
+
+Covers the §14 contracts:
+- per-family batched cost models are bitwise-equal to their pure-Python
+  `op_kernel_stats_ref` oracles;
+- family tuning (`tune_op`) produces fully-populated, feasible GO entries;
+- §6.7 isolation property: adding non-GEMM ops to a bundle never changes
+  the compatibility class or the planned grouping of the GEMM-only subset;
+- GO-library v2 → v3 migration preserves every v2 entry bitwise;
+- the runtime's mixed-bundle queue co-schedules all four kernel families
+  with a modeled speedup over sequential and a zero-eval steady state;
+- mixed-group execution routes every family through its real kernel and
+  matches the references.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests.hypothesis_compat import given, settings, st
+
+from repro.core import (
+    FAMILIES,
+    AttentionDesc,
+    ConcurrencyController,
+    GemmDesc,
+    GemmRequest,
+    GOLibrary,
+    GroupedGemmDesc,
+    ScanDesc,
+    compat_key,
+    family_of,
+    op_from_key,
+    tune_op,
+)
+from repro.core.cost_model import (
+    DEFAULT_SPEC,
+    EVAL_COUNTER,
+    kernel_stats_batch,
+    op_kernel_stats_ref,
+    op_tile_ws,
+    group_time,
+    sequential_time,
+)
+from repro.core.library import SCHEMA_VERSION
+from repro.core.tuner import CDS, FAMILY_TILES
+from repro.kernels.gemm.ops import TileConfig
+from repro.runtime import MIXED_CLASS, Runtime, RuntimeConfig
+
+OP_DESCS = (
+    AttentionDesc(4, 8, 2, 1, 512, 64),
+    AttentionDesc(2, 4, 4, 256, 256, 128, causal=True, dtype="f32"),
+    GroupedGemmDesc(4, 32, 256, 512),
+    GroupedGemmDesc(3, 10, 128, 256, "f32", rows=(4, 2, 4)),
+    ScanDesc(2, 64, 4, 32, 16),
+    ScanDesc(4, 1, 8, 64, 64, "f32"),
+)
+
+# A compact 4-family decode-ish bundle reused across the runtime tests.
+BUNDLE = (
+    GemmDesc(8, 1024, 512),
+    GemmDesc(8, 512, 512),
+    AttentionDesc(8, 8, 2, 1, 512, 64),
+    GroupedGemmDesc(4, 16, 512, 512),
+    ScanDesc(8, 1, 8, 64, 32),
+)
+
+
+# ----------------------------------------------------------- cost model
+@pytest.mark.parametrize("desc", OP_DESCS, ids=lambda d: d.key())
+def test_op_stats_batch_matches_ref(desc):
+    """Vectorized family models == pure-Python oracle, bitwise, across
+    tiles and budgets (the §13 parity discipline extended to §14)."""
+    for tile in (TileConfig(8, 128, 128), TileConfig(64, 256, 256),
+                 TileConfig(256, 512, 128)):
+        for budget in (None, DEFAULT_SPEC.vmem_bytes // 4, 2 ** 18):
+            b = kernel_stats_batch(desc, tile, budget).item()
+            r = op_kernel_stats_ref(desc, tile, budget)
+            assert b == r, (desc.key(), tile.key(), budget)
+
+
+def test_op_key_roundtrip():
+    for d in OP_DESCS + BUNDLE:
+        assert op_from_key(d.key()) == d
+    # family-prefixed keys can never collide with GEMM keys (digits first)
+    for d in OP_DESCS:
+        assert d.key().split("_")[0] in ("fa", "gg", "ms")
+
+
+def test_ragged_rows_validated():
+    with pytest.raises(AssertionError):
+        GroupedGemmDesc(2, 10, 64, 64, rows=(4, 4))  # sums to 8, not 10
+    d = GroupedGemmDesc(3, 10, 64, 64)
+    assert sum(d.row_vector()) == 10 and len(d.row_vector()) == 3
+
+
+# ---------------------------------------------------------------- tuner
+@pytest.mark.parametrize("desc", OP_DESCS[::2], ids=lambda d: d.key())
+def test_tune_op_populates_family_entry(desc):
+    e = tune_op(desc)
+    assert e.family == desc.family
+    assert set(e.go) == set(CDS) and set(e.speedup) == set(CDS)
+    assert e.isolated in FAMILY_TILES[desc.family]
+    # Step-① feasibility: the isolated winner fits the full-chip budget.
+    assert op_tile_ws(desc, e.isolated) <= DEFAULT_SPEC.vmem_bytes
+
+
+def test_scan_prefers_concurrency():
+    """The memory-bound scan family gains from grouping (it fills
+    compute bubbles) — its GO entries should prefer CD > 1."""
+    e = tune_op(ScanDesc(8, 1, 16, 64, 64))
+    assert e.preferred_cd() > 1
+
+
+# --------------------------------------------- §6.7 isolation property
+_GEMM_POOL = st.lists(
+    st.tuples(st.sampled_from([8, 64, 512]), st.sampled_from([128, 1024]),
+              st.sampled_from([256, 2048])),
+    min_size=1, max_size=6,
+)
+_OP_POOL = st.lists(st.sampled_from(list(BUNDLE[2:])), min_size=1,
+                    max_size=3)
+_LIB = GOLibrary()
+
+
+def _gemm_groups(ctrl, descs):
+    """Planned GEMM groupings as desc-key multisets (§6.7 classes)."""
+    sched = ctrl.plan(descs)
+    out = []
+    for gp in sched.groups:
+        keys = sorted(descs[i].key() for i in gp.indices
+                      if family_of(descs[i]) == "gemm")
+        if keys:
+            out.append((gp.mode if len(keys) == len(gp.indices) else "mixed",
+                        tuple(keys)))
+    return sorted(out)
+
+
+@settings(max_examples=15, deadline=None)
+@given(gemms=_GEMM_POOL, ops=_OP_POOL, seed=st.integers(0, 2 ** 16))
+def test_nongemm_ops_never_change_gemm_subset_class(gemms, ops, seed):
+    """Adding non-GEMM ops to a bundle must not perturb the §6.7
+    compatibility class, nor the planned grouping, of the GEMM-only
+    subset: classes never straddle families."""
+    rng = np.random.default_rng(seed)
+    gemm_descs = [GemmDesc(m, n, k) for m, n, k in gemms]
+    mixed = list(gemm_descs)
+    for o in ops:
+        mixed.insert(int(rng.integers(0, len(mixed) + 1)), o)
+    # classes of the GEMM subset are untouched by the insertion
+    assert [compat_key(d) for d in gemm_descs] == [
+        compat_key(d) for d in mixed if family_of(d) == "gemm"]
+    # no op shares a class with any GEMM
+    gemm_classes = {compat_key(d) for d in gemm_descs}
+    assert not any(compat_key(o) in gemm_classes for o in ops)
+    # and the planner groups the GEMM subset identically
+    ctrl = ConcurrencyController(library=_LIB)
+    assert _gemm_groups(ctrl, gemm_descs) == _gemm_groups(ctrl, mixed)
+
+
+# ------------------------------------------------------- v2→v3 library
+def _v2_blob(entries):
+    return {"schema": 2, "entries": entries}
+
+
+_V2_TILE = st.tuples(st.sampled_from([8, 64, 256]),
+                     st.sampled_from([128, 512]),
+                     st.sampled_from([128, 256]),
+                     st.sampled_from([1, 2, 8]))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.dictionaries(
+    st.sampled_from(["8_128_16384_00_bf16", "512_512_512_10_f32",
+                     "64_1024_2048_01_bf16_b4"]),
+    st.fixed_dictionaries({
+        "isolated": _V2_TILE,
+        "go": st.dictionaries(st.sampled_from(["2", "4", "8", "16"]),
+                              _V2_TILE, min_size=1),
+        "rc_source": st.dictionaries(st.sampled_from(["2", "16"]),
+                                     st.sampled_from(["GPU", "GPU/2"])),
+        "speedup": st.dictionaries(st.sampled_from(["2", "16"]),
+                                   st.floats(0.5, 4.0, allow_nan=False)),
+    }),
+    min_size=1, max_size=3,
+))
+def test_v2_to_v3_migration_preserves_entries_bitwise(tmp_path_factory,
+                                                      entries):
+    """Every v2 entry survives the v3 migration bit-for-bit: tiles
+    (split-K included), rc sources, and float speedups unchanged; the
+    re-saved file is v3 with the GEMM family default."""
+    tmp_path = tmp_path_factory.mktemp("golib_v2")
+    blob = _v2_blob({
+        k: {**v, "isolated": list(v["isolated"]),
+            "go": {cd: list(t) for cd, t in v["go"].items()}}
+        for k, v in entries.items()
+    })
+    p = tmp_path / "golib.json"
+    p.write_text(json.dumps(blob))
+    with pytest.warns(UserWarning, match="migrating"):
+        lib = GOLibrary(p)
+    assert lib.loaded_schema == 2 and len(lib) == len(entries)
+    for k, v in entries.items():
+        e = lib.entries()[k]
+        assert e.family == "gemm"
+        assert e.isolated == TileConfig(*v["isolated"])
+        assert e.go == {int(c): TileConfig(*t) for c, t in v["go"].items()}
+        assert e.rc_source == {int(c): s for c, s in v["rc_source"].items()}
+        # float speedups bitwise (JSON round-trips IEEE doubles exactly)
+        assert e.speedup == {int(c): s for c, s in v["speedup"].items()}
+    lib.save()
+    saved = json.loads(p.read_text())
+    assert saved["schema"] == SCHEMA_VERSION
+    for k, v in entries.items():
+        sv = saved["entries"][k]
+        assert sv["family"] == "gemm"
+        assert sv["isolated"] == list(v["isolated"])
+        assert sv["speedup"] == v["speedup"]
+    # reload at v3: no warning, entries intact
+    lib2 = GOLibrary(p)
+    assert lib2.loaded_schema == SCHEMA_VERSION
+    assert lib2.entries().keys() == lib.entries().keys()
+
+
+def test_v1_blob_still_discarded(tmp_path):
+    """v1 semantics are unchanged by the v3 bump: pre-split-K entries
+    are stale and must be dropped, not migrated."""
+    d = GemmDesc(256, 256, 256)
+    p = tmp_path / "golib.json"
+    p.write_text(json.dumps({d.key(): {"isolated": [256, 256, 256],
+                                       "go": {}, "rc_source": {},
+                                       "speedup": {}}}))
+    with pytest.warns(UserWarning, match="stale schema v1"):
+        lib = GOLibrary(p)
+    assert lib.loaded_schema == 1 and len(lib) == 0
+
+
+# ------------------------------------------------------- runtime bundle
+def test_submit_bundle_co_schedules_all_families():
+    lib = GOLibrary()
+    rt = Runtime(ConcurrencyController(library=lib),
+                 RuntimeConfig(window_s=0.0))
+    bundle = list(BUNDLE)
+    rt.prewarm_bundle(bundle)
+    rt.submit_bundle(bundle, tenant="t0", now=0.0)
+    launches = rt.flush(now=1.0)
+    assert launches, "bundle flush produced no launches"
+    assert all(l.class_key == MIXED_CLASS for l in launches)
+    served = {family_of(tk.desc) for l in launches for tk in l.tickets}
+    assert served == set(FAMILIES)
+    # modeled co-scheduling beats the sequential baseline
+    busy = sum(l.plan.modeled_time_s for l in launches)
+    seq = sequential_time([(d, lib.get(d).isolated) for d in bundle])
+    assert busy < seq
+    # per-member GO tiles ride along for mixed groups
+    for l in launches:
+        if l.plan.mode == "mixed":
+            assert l.plan.tiles and len(l.plan.tiles) == len(l.plan.indices)
+
+
+def test_mixed_bundle_steady_state_zero_evals():
+    """The §13 flush fast path holds for mixed bundles: a repeat bundle
+    is a plan-cache hit with zero cost-model evaluations."""
+    rt = Runtime(ConcurrencyController(library=GOLibrary()),
+                 RuntimeConfig(window_s=0.0))
+    bundle = list(BUNDLE)
+    rt.prewarm_bundle(bundle)
+    rt.submit_bundle(bundle, now=0.0)
+    rt.flush(now=1.0)
+    e0 = EVAL_COUNTER.evals
+    rt.submit_bundle(bundle, now=2.0)
+    launches = rt.flush(now=3.0)
+    assert launches and all(l.cache_hit for l in launches)
+    assert EVAL_COUNTER.evals - e0 == 0
+    assert rt.telemetry.last_flush_evals == 0
+
+
+def test_bundle_signature_does_not_alias_class_queue():
+    """A mixed bundle containing only GEMMs must not reuse a class
+    queue's cached per-class plan (different planners, same descs)."""
+    rt = Runtime(ConcurrencyController(library=GOLibrary()),
+                 RuntimeConfig(window_s=0.0))
+    descs = [GemmDesc(64, 512, 512)] * 3
+    for d in descs:
+        rt.submit(d, now=0.0)
+    rt.flush(now=1.0)
+    n_cached = rt.plan_cache_size
+    rt.submit_bundle(descs, now=2.0)
+    rt.flush(now=3.0)
+    assert rt.plan_cache_size == n_cached + 1  # distinct signature
+
+
+def test_mixed_group_time_monotone_vs_members():
+    """Sanity on the shared overlap model: a mixed group is never faster
+    than its slowest member alone and never slower than sequential."""
+    lib = GOLibrary()
+    members = [(d, lib.get(d).isolated) for d in BUNDLE]
+    gt = group_time(members)
+    seq = sequential_time(members)
+    slowest = max(
+        sequential_time([m]) for m in members
+    )
+    assert slowest * 0.99 <= gt <= seq * 1.01
+
+
+# ------------------------------------------------------------ execution
+def test_mixed_execute_matches_family_references():
+    from repro.kernels.flash_attention.ref import flash_ref
+    from repro.kernels.grouped_gemm.ref import ragged_gemm_ref
+    from repro.kernels.mamba_scan.ref import ssd_chunk_ref
+
+    key = jax.random.PRNGKey(0)
+    B, H, S, D = 2, 4, 64, 32
+    fa = AttentionDesc(B, H, H, 1, S, D, True, "f32")
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i),
+                                 (B, H, s, D), jnp.float32)
+               for i, s in ((1, 1), (2, S), (3, S)))
+    gg = GroupedGemmDesc(3, 10, 16, 24, "f32", rows=(4, 2, 4))
+    a = jax.random.normal(jax.random.fold_in(key, 4), (10, 24), jnp.float32)
+    bw = jax.random.normal(jax.random.fold_in(key, 5), (3, 24, 16),
+                           jnp.float32)
+    ms = ScanDesc(2, 8, 4, 16, 8, "f32")
+    xd = jax.random.normal(jax.random.fold_in(key, 6), (2, 8, 4, 16),
+                           jnp.float32)
+    da = -jnp.abs(jax.random.normal(jax.random.fold_in(key, 7), (2, 8, 4),
+                                    jnp.float32))
+    Bm = jax.random.normal(jax.random.fold_in(key, 8), (2, 8, 4, 8),
+                           jnp.float32)
+    Cm = jax.random.normal(jax.random.fold_in(key, 9), (2, 8, 4, 8),
+                           jnp.float32)
+    gm = GemmDesc(16, 32, 24, dtype="f32")
+    ga = jax.random.normal(jax.random.fold_in(key, 10), (16, 24),
+                           jnp.float32)
+    gb = jax.random.normal(jax.random.fold_in(key, 11), (24, 32),
+                           jnp.float32)
+
+    rt = Runtime(ConcurrencyController(library=GOLibrary()),
+                 RuntimeConfig(window_s=0.0, execute=True, interpret=True))
+    tks = rt.submit_bundle(
+        [GemmRequest(desc=gm, a=ga, b=gb),
+         GemmRequest(desc=fa, inputs=(q, k, v)),
+         GemmRequest(desc=gg, inputs=(a, bw)),
+         GemmRequest(desc=ms, inputs=(xd, da, Bm, Cm))],
+        now=0.0)
+    rt.drain(now=1.0)
+    assert "mixed" in rt.telemetry.mode_counts()
+    np.testing.assert_allclose(tks[0].result, ga @ gb,
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(
+        tks[1].result, flash_ref(q, k, v, causal=True, q_offset=S - 1),
+        rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(
+        tks[2].result,
+        ragged_gemm_ref(a, bw, jnp.asarray([4, 2, 4], jnp.int32)),
+        rtol=2e-4, atol=2e-4)
+    yref, _ = ssd_chunk_ref(xd, da, Bm, Cm, chunk=8)
+    np.testing.assert_allclose(tks[3].result, yref, rtol=2e-3, atol=2e-3)
