@@ -31,12 +31,14 @@ modeled concurrent-vs-sequential speedup of that pool.
 job gates against the committed copy), and `results/serving_golib.json`
 on every run.  The GO library file records its schema version
 (`repro.core.library.SCHEMA_VERSION`); v1 files (pre-split-K search
-space) are discarded at load with a warning and re-tuned, while a v2
-file is **migrated** to v3 (DESIGN.md §14) — its GEMM entries were tuned
-on the same search space v3 uses, so they are preserved bitwise, tagged
-``family="gemm"``, and the save at the end of the run rewrites the file
-under the v3 envelope (per-entry ``family`` field).  A stale library is
-never silently used to mis-plan.
+space) are discarded at load with a warning and re-tuned, while v2/v3
+files are **migrated** to v4 (DESIGN.md §14, §15) — their entries were
+tuned on search spaces v4 subsumes, so tiles are preserved bitwise
+(v2 additionally gains ``family="gemm"``; short tile lists default
+``stream_k=0``), and the save at the end of the run rewrites the file
+under the compact v4 envelope (5-element tiles
+``[bm, bn, bk, split_k, stream_k]``).  A stale library is never
+silently used to mis-plan.
 """
 from __future__ import annotations
 

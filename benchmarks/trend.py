@@ -15,9 +15,9 @@ benchmark-agnostic: for every report present in both trees it walks the
 current report's metrics, looks up the committed baseline value, and
 fails when the value regressed by more than ``--tolerance`` (default
 10%) in the metric's declared direction.  Metrics new in the current
-report (no baseline yet) pass — committing the fresh JSON is what
-establishes their trajectory; a zero baseline of a lower-is-better
-metric must stay zero.
+report (no baseline yet) pass with a visible ``::warning::`` line —
+committing the fresh JSON is what establishes their trajectory; a zero
+baseline of a lower-is-better metric must stay zero.
 
     python -m benchmarks.trend --baseline <dir-with-committed-jsons> \
         [--current results] [--tolerance 0.10]
@@ -49,8 +49,16 @@ def compare_reports(
     base_metrics = baseline.get("trend_metrics", {})
     for metric, spec in current.get("trend_metrics", {}).items():
         base = base_metrics.get(metric)
-        if base is None:
-            continue                       # new metric: baseline starts now
+        if base is None or "value" not in base:
+            # New metric (or a baseline entry missing its value — stale
+            # hand-edited JSON): say so visibly instead of dying on a
+            # KeyError or silently passing; committing the fresh report
+            # is what starts the trajectory.
+            reason = ("no committed baseline" if base is None
+                      else "baseline entry has no 'value'")
+            print(f"::warning::{name}:{metric}: new metric, {reason} — "
+                  "skipping (trajectory starts with this run)")
+            continue
         bv, cv = float(base["value"]), float(spec["value"])
         better = spec.get("better", "higher")
         if better == "higher":

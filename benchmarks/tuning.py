@@ -9,11 +9,18 @@ Measures the two perf claims of the vectorized-tuner work (DESIGN.md §13):
    - the batched sweep on the SAME space (apples-to-apples speedup;
      entries are bitwise identical, so the modeled speedups are
      unchanged by construction and asserted so), and
-   - the batched sweep on the EXPANDED space (63 tiles × split-K axis) —
-     the "10–100× larger search space for free" claim.
+   - the batched sweep on the EXPANDED space (63 tiles × split-K axis ×
+     Stream-K step-② candidates) — the "10–100× larger search space for
+     free" claim.
 2. **Flush fast path** — steady-state (plan-cache-hit) flush latency
    percentiles and its cost-model-evaluation / signature-re-sort
    counters, which must both be ZERO.
+3. **Decomposition selection** — split-K wins on decode classes at
+   CD ≥ 8 (stream disabled), Stream-K wins at the odd CDs (3/5/6/7),
+   and the (class, CD) decomposition census over a fixed shape set
+   whose Stream-K cell count is trend-gated (``decomposition_counts``)
+   so Stream-K deselection fails CI instead of flattening perf quietly
+   (DESIGN.md §15).
 
 Wall-clock thresholds are asserted only in the full run; ``--smoke``
 (the CI perf gate) asserts the **count-based** thresholds below, which
@@ -41,6 +48,7 @@ from repro.core.cost_model import EVAL_COUNTER, group_time  # noqa: E402
 from repro.core.predictor import generate_gemm_pool  # noqa: E402
 from repro.core.tuner import (  # noqa: E402
     CANDIDATE_TILES,
+    CDS,
     LEGACY_CANDIDATE_TILES,
     SPLIT_K_CANDIDATES,
     tune_gemm_batch,
@@ -50,7 +58,7 @@ from repro.runtime import Runtime, RuntimeConfig  # noqa: E402
 
 # ----------------------------------------------------------- committed gates
 # Count-based (CI --smoke, flake-free):
-MAX_EVALS_PER_GEMM = 300       # expanded space: 3·63 (①) + 4·12 (②) = 237
+MAX_EVALS_PER_GEMM = 330       # expanded space: 3·63 (①) + 8·(12+3) (②) = 309
 FLUSH_HIT_EVALS = 0            # steady-state flush touches no cost model
 FLUSH_HIT_RESORTS = 0          # ... and never re-sorts a signature
 
@@ -73,6 +81,18 @@ DECODE_SHAPES = (
     GemmDesc(8, 256, 16384),
 )
 
+# Dense counterpart set for the decomposition census: shapes whose (m, n)
+# grids already fill the chip, where Stream-K's smaller live grid trades
+# away wave parallelism and the tuner must keep tile/split-K.  Fixed
+# (flag-independent) so the census — and its trend metric — is identical
+# across --smoke and full runs.
+DENSE_SHAPES = (
+    GemmDesc(4096, 4096, 4096),
+    GemmDesc(2048, 512, 20480),
+    GemmDesc(1024, 3072, 2048),
+    GemmDesc(512, 512, 8192),
+)
+
 
 def _timed(fn) -> float:
     t0 = time.perf_counter()
@@ -85,7 +105,8 @@ def bench_tuner(n_gemms: int) -> Dict[str, object]:
 
     # Warm both paths (numpy allocator, code paths) outside the timers.
     tune_gemm_reference(pool[0])
-    tune_gemm_batch(pool[:4], tiles=LEGACY_CANDIDATE_TILES, split_ks=(1,))
+    tune_gemm_batch(pool[:4], tiles=LEGACY_CANDIDATE_TILES, split_ks=(1,),
+                    stream_k=False)
     tune_gemm_batch(pool[:4])
 
     # -- scalar reference sweep (legacy space)
@@ -99,11 +120,11 @@ def bench_tuner(n_gemms: int) -> Dict[str, object]:
     # that a single allocator hiccup would dominate the ratio)
     EVAL_COUNTER.reset()
     eq_entries = tune_gemm_batch(pool, tiles=LEGACY_CANDIDATE_TILES,
-                                 split_ks=(1,))
+                                 split_ks=(1,), stream_k=False)
     eq_evals, eq_calls = EVAL_COUNTER.snapshot()
     vec_equal_s = min(
         _timed(lambda: tune_gemm_batch(pool, tiles=LEGACY_CANDIDATE_TILES,
-                                       split_ks=(1,)))
+                                       split_ks=(1,), stream_k=False))
         for _ in range(3)
     )
 
@@ -190,12 +211,15 @@ def bench_flush(rounds: int) -> Dict[str, object]:
 
 
 def bench_splitk() -> Dict[str, object]:
-    """Modeled split-K wins on the decode classes at CD ≥ 8."""
+    """Modeled split-K wins on the decode classes at CD ≥ 8 (Stream-K
+    disabled on both sides so the split axis is measured in isolation —
+    with it on, Stream-K outbids split-K on these shapes and the split
+    column collapses to 1)."""
     out = {}
     wins = 0
     for d in DECODE_SHAPES:
-        e = tune_gemm_batch([d])[0]
-        e1 = tune_gemm_batch([d], split_ks=(1,))[0]
+        e = tune_gemm_batch([d], stream_k=False)[0]
+        e1 = tune_gemm_batch([d], split_ks=(1,), stream_k=False)[0]
         per_cd = {}
         for cd in (8, 16):
             t_split = group_time([(d, e.go[cd])] * cd)
@@ -210,6 +234,67 @@ def bench_splitk() -> Dict[str, object]:
             wins += 1
         out[d.key()] = per_cd
     return {"classes": out, "classes_won": wins}
+
+
+def bench_streamk() -> Dict[str, object]:
+    """Modeled Stream-K wins on the decode classes at the ODD CDs
+    (3, 5, 6, 7) whose VMEM shares quantize worst onto fixed split
+    grids, plus the (class, CD) decomposition census behind the
+    ``decomposition_counts`` trend metric (DESIGN.md §15)."""
+    shapes = list(DECODE_SHAPES) + list(DENSE_SHAPES)
+    full = tune_gemm_batch(shapes)
+    legacy = tune_gemm_batch(shapes, stream_k=False)
+
+    out = {}
+    wins = 0
+    for d, e, e0 in zip(DECODE_SHAPES, full, legacy):
+        per_cd = {}
+        for cd in (3, 5, 6, 7):
+            t_stream = group_time([(d, e.go[cd])] * cd)
+            t_legacy = group_time([(d, e0.go[cd])] * cd)
+            per_cd[cd] = {
+                "go_tile": e.go[cd].key(),
+                "stream_k": e.go[cd].stream_k,
+                "win_vs_best_legacy": t_legacy / t_stream,
+            }
+        if any(v["stream_k"] > 0 and v["win_vs_best_legacy"] > 1.0
+               for v in per_cd.values()):
+            wins += 1
+        out[d.key()] = per_cd
+
+    # Table flatness: distinct GO kernels a class commits across the CD
+    # axis.  Stream-K's flat live grid lets ONE kernel serve many CDs, so
+    # the stream tables must be no wider than the legacy ones.
+    flat_stream = {d.key(): len({e.go[cd].key() for cd in CDS})
+                   for d, e in zip(shapes, full)}
+    flat_legacy = {d.key(): len({e.go[cd].key() for cd in CDS})
+                   for d, e in zip(shapes, legacy)}
+
+    # Decomposition census over the fixed shape set: which of the three
+    # decompositions each (class, CD) cell commits.  The census feeds the
+    # trend gate so a silent regression where Stream-K stops being
+    # selected fails CI instead of flattening perf quietly.
+    counts = {"tile": 0, "split_k": 0, "stream_k": 0}
+    for e in full:
+        for cd in CDS:
+            t = e.go[cd]
+            if t.stream_k > 0:
+                counts["stream_k"] += 1
+            elif t.split_k > 1:
+                counts["split_k"] += 1
+            else:
+                counts["tile"] += 1
+    return {
+        "classes": out,
+        "classes_won": wins,
+        "distinct_go_kernels_per_class": {
+            "stream": flat_stream, "legacy": flat_legacy},
+        "mean_distinct_go_kernels": {
+            "stream": sum(flat_stream.values()) / len(flat_stream),
+            "legacy": sum(flat_legacy.values()) / len(flat_legacy)},
+        "decomposition_counts": counts,
+        "census_cells": len(shapes) * len(CDS),
+    }
 
 
 def main(argv=None) -> Dict[str, object]:
@@ -228,6 +313,7 @@ def main(argv=None) -> Dict[str, object]:
     report["tuner"] = bench_tuner(n)
     report["flush"] = bench_flush(rounds)
     report["split_k"] = bench_splitk()
+    report["stream_k"] = bench_streamk()
     # Count-based trajectory record for the CI bench-trend gate
     # (`benchmarks/trend.py`): deterministic metrics only — wall-clock
     # numbers live in the report but are never trend-gated.
@@ -253,12 +339,22 @@ def main(argv=None) -> Dict[str, object]:
         "split_k_classes_won": {
             "value": report["split_k"]["classes_won"],
             "better": "higher"},
+        "stream_k_classes_won": {
+            "value": report["stream_k"]["classes_won"],
+            "better": "higher"},
+        # The census cell count Stream-K wins over the fixed shape set —
+        # if a cost-model or tuner change silently stops selecting
+        # Stream-K, this drops >10% and the bench-trend gate fails.
+        "decomposition_counts": {
+            "value": report["stream_k"]["decomposition_counts"]["stream_k"],
+            "better": "higher"},
     }
 
     RESULTS.mkdir(exist_ok=True)
     out_path = RESULTS / "BENCH_tuning.json"
     out_path.write_text(json.dumps(report, indent=1))
     tun, flu, spk = report["tuner"], report["flush"], report["split_k"]
+    stk = report["stream_k"]
     print(f"# tuner: scalar {tun['scalar_us_per_gemm']:.0f}us/GEMM | "
           f"vec equal-space {tun['vec_equal_us_per_gemm']:.1f}us/GEMM "
           f"({tun['equal_space_speedup']:.1f}x) | vec expanded "
@@ -271,6 +367,14 @@ def main(argv=None) -> Dict[str, object]:
           f"{flu['flush_sig_resorts']}")
     print(f"# split-K: {spk['classes_won']}/{len(DECODE_SHAPES)} decode "
           f"classes won at CD>=8")
+    cc = stk["decomposition_counts"]
+    print(f"# stream-K: {stk['classes_won']}/{len(DECODE_SHAPES)} decode "
+          f"classes won at odd CDs | census "
+          f"tile {cc['tile']} / split-K {cc['split_k']} / "
+          f"stream-K {cc['stream_k']} of {stk['census_cells']} cells | "
+          f"distinct kernels/class "
+          f"{stk['mean_distinct_go_kernels']['stream']:.1f} vs "
+          f"{stk['mean_distinct_go_kernels']['legacy']:.1f} legacy")
     print(f"# wrote {out_path}")
 
     # ---- count-based gates (always; deterministic, CI-safe)
@@ -284,6 +388,13 @@ def main(argv=None) -> Dict[str, object]:
         f"hit flush performed {flu['flush_evals_per_hit']} cost-model evals"
     assert flu["flush_sig_resorts"] == FLUSH_HIT_RESORTS
     assert spk["classes_won"] >= 1, "no decode class won with split-K"
+    assert stk["classes_won"] >= 3, \
+        f"only {stk['classes_won']} decode classes won with Stream-K"
+    assert stk["decomposition_counts"]["stream_k"] >= 1, \
+        "census committed zero Stream-K cells"
+    assert (stk["mean_distinct_go_kernels"]["stream"]
+            <= stk["mean_distinct_go_kernels"]["legacy"]), \
+        "Stream-K tables are WIDER than legacy across the CD axis"
     # ---- wall-clock gates (full run only; excluded from CI smoke)
     if not args.smoke:
         assert tun["equal_space_speedup"] >= MIN_EQUAL_SPACE_SPEEDUP, \

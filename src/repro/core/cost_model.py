@@ -25,6 +25,17 @@ larger parallel tile count — which shrinks the per-tile fill/drain ramp,
 the dominant cost for single-tile skinny GEMMs (decode-shape M≤mxu,
 N≤bn), exactly the Stream-K tail-quantization recovery.
 
+**Stream-K** (DESIGN.md §15) generalizes that to a *work-centric*
+occupancy curve: ``stream_k = G`` runs a persistent grid of ``G``
+workgroups, each walking an equal contiguous span of the global
+``tm·tn·tk·batch`` MAC iterations.  The parallel instance count becomes
+the live grid (flat work per workgroup, no tail-wave quantization term —
+``n_tiles`` no longer quantizes on the output shape), and the only
+added traffic is one extra f32 partial round-trip per output tile that
+*straddles* a workgroup boundary — at most ``G - 1`` of them, computed
+in closed form from the span period.  The fixup pass costs the same
+extra launch as the split-K reduce epilogue.
+
 **Evaluation layout** (DESIGN.md §13): the model is written once, in
 NumPy, over struct-of-arrays (`DescBatch` × `TileBatch` × broadcastable
 budget/bandwidth arrays).  The scalar functions (`kernel_stats`,
@@ -140,12 +151,16 @@ EVAL_COUNTER = EvalCounter()
 # --------------------------------------------------------- struct-of-arrays
 @dataclass(frozen=True)
 class TileBatch:
-    """Struct-of-arrays over candidate `TileConfig`s (int64 fields)."""
+    """Struct-of-arrays over candidate `TileConfig`s (int64 fields).
+
+    ``stream_k`` is optional (None ⇒ all-tile/split-K batch, the
+    pre-Stream-K layout) so legacy constructions stay valid."""
 
     bm: np.ndarray
     bn: np.ndarray
     bk: np.ndarray
     split_k: np.ndarray
+    stream_k: np.ndarray | None = None
 
     @staticmethod
     def from_tiles(tiles: Sequence[TileConfig]) -> "TileBatch":
@@ -154,6 +169,7 @@ class TileBatch:
             bn=np.asarray([t.bn for t in tiles], np.int64),
             bk=np.asarray([t.bk for t in tiles], np.int64),
             split_k=np.asarray([t.split_k for t in tiles], np.int64),
+            stream_k=np.asarray([t.stream_k for t in tiles], np.int64),
         )
 
     def vmem_bytes(self, in_bytes: int = 2, acc_bytes: int = 4) -> np.ndarray:
@@ -164,8 +180,9 @@ class TileBatch:
         return ab + acc + out
 
     def tile(self, i: int) -> TileConfig:
+        sk = 0 if self.stream_k is None else int(self.stream_k[i])
         return TileConfig(int(self.bm[i]), int(self.bn[i]), int(self.bk[i]),
-                          int(self.split_k[i]))
+                          int(self.split_k[i]), stream_k=sk)
 
     def __len__(self) -> int:
         return int(np.broadcast(self.bm, self.bn, self.bk, self.split_k).size)
@@ -218,7 +235,7 @@ class KernelStats:
     re-expressed for TPU (DESIGN.md §2); consumed by the predictor's
     feature vector (DESIGN.md §4) and the tuner (DESIGN.md §3)."""
 
-    n_tiles: int          # = #WGs (× split_k slices)
+    n_tiles: int          # = #WGs (× split_k slices; = live grid stream-K)
     waves: float          # pipeline waves (tiles / in-flight slots)
     occupancy: float      # VMEM-utilization fraction of the budget used
     vmem_bytes: float     # working set (dbl-buffered panels + acc)
@@ -227,6 +244,7 @@ class KernelStats:
     mxu_util: float       # alignment efficiency
     a_resident: bool      # A row-panel held in VMEM (traffic saver)
     splits: int = 1       # effective split-K slice count (≤ k-tiles)
+    streams: int = 0      # Stream-K live workgroup count (0 = not stream-K)
 
 
 @dataclass(frozen=True)
@@ -242,6 +260,7 @@ class KernelStatsBatch:
     mxu_util: np.ndarray
     a_resident: np.ndarray
     splits: np.ndarray
+    streams: np.ndarray
 
     def item(self, i=()) -> KernelStats:
         return KernelStats(
@@ -254,6 +273,7 @@ class KernelStatsBatch:
             mxu_util=float(self.mxu_util[i]),
             a_resident=bool(self.a_resident[i]),
             splits=int(self.splits[i]),
+            streams=int(self.streams[i]),
         )
 
 
@@ -266,7 +286,8 @@ class TilePrecomp:
 
     tn: np.ndarray        # j-sweep length (A re-read factor)
     splits: np.ndarray    # effective split-K slice count (≤ k-tiles)
-    n_tiles: np.ndarray   # parallel grid tiles (× splits)
+    streams: np.ndarray   # Stream-K live workgroup count (0 = not stream-K)
+    n_tiles: np.ndarray   # parallel grid tiles (× splits; live grid stream-K)
     ws: np.ndarray        # per-instance working set
     a_panel: np.ndarray   # per-slice A row panel (bm · K/s · bytes)
     a_unit: np.ndarray    # one full A read: M·K·bytes·batch·stream
@@ -286,6 +307,16 @@ def tile_precompute(d, t, spec: TPUSpec = DEFAULT_SPEC) -> TilePrecomp:
     # Split-K: s independent K-slices, each a parallel grid instance.
     s = np.minimum(t.split_k, tk)
     n_tiles = tm * tn * s * batch
+    # Stream-K: a persistent grid of g_live workgroups, each walking
+    # ⌈total/G⌉ of the tm·tn·tk·batch MAC iterations — the parallel
+    # instance count IS the live grid (work-centric, no tail waves).
+    sk = np.asarray(t.stream_k if getattr(t, "stream_k", None) is not None
+                    else 0, np.int64)
+    total = tm * tn * tk * batch
+    ipw = _cdiv(total, np.maximum(np.minimum(sk, total), 1))
+    g_live = _cdiv(total, ipw)
+    n_tiles = np.where(sk > 0, g_live, n_tiles)
+    streams = np.where(sk > 0, g_live, np.zeros_like(g_live))
 
     ws = (2 * (bm * bk + bk * bn) * in_bytes
           + bm * bn * 4 + bm * bn * in_bytes)
@@ -305,6 +336,14 @@ def tile_precompute(d, t, spec: TPUSpec = DEFAULT_SPEC) -> TilePrecomp:
     # Split-K epilogue traffic: each slice writes an f32 partial C and the
     # reduce reads them all back (2·s·M·N·4); zero when un-split.
     part_bytes = np.where(s > 1, s * (2 * (M * N * 4) * batch), 0.0)
+    # Stream-K partials: only output tiles *straddling* a workgroup
+    # boundary pay the f32 partial round-trip — one straddle per interior
+    # boundary that does not land exactly on a tile edge (closed form via
+    # the span period; ≤ g_live − 1 total).
+    period = tk // np.gcd(ipw, tk)
+    straddle = (g_live - 1) - (g_live - 1) // period
+    part_bytes = np.where(sk > 0, straddle * (2.0 * (bm * bn * 4)),
+                          part_bytes)
     bc_bytes = (b_bytes + c_bytes) + part_bytes
 
     # padded FLOPs (tile-edge waste)
@@ -315,9 +354,9 @@ def tile_precompute(d, t, spec: TPUSpec = DEFAULT_SPEC) -> TilePrecomp:
         * _align_eff(bk, mxu)
     )
     return TilePrecomp(
-        tn=tn, splits=s, n_tiles=n_tiles, ws=ws, a_panel=a_panel,
-        a_unit=np.asarray(a_unit), bc_bytes=bc_bytes, flops=flops, util=util,
-        peak=np.asarray(_peak_of(d, spec)),
+        tn=tn, splits=s, streams=streams, n_tiles=n_tiles, ws=ws,
+        a_panel=a_panel, a_unit=np.asarray(a_unit), bc_bytes=bc_bytes,
+        flops=flops, util=util, peak=np.asarray(_peak_of(d, spec)),
     )
 
 
@@ -361,6 +400,7 @@ def kernel_stats_batch(
         mxu_util=p.util,
         a_resident=a_resident,
         splits=p.splits,
+        streams=p.streams,
     )
 
 
@@ -369,8 +409,9 @@ def isolated_time_batch(
     pre: TilePrecomp | None = None,
 ) -> np.ndarray:
     """Vectorized `isolated_time` (one launch per evaluation slot; split-K
-    kernels pay one extra launch for the reduce epilogue).  Non-GEMM
-    families share the same roofline composition over their own stats."""
+    and Stream-K kernels pay one extra launch for the reduce/fixup
+    epilogue).  Non-GEMM families share the same roofline composition
+    over their own stats."""
     if not isinstance(d, (GemmDesc, DescBatch)):
         st = kernel_stats_batch(d, t, vmem_budget, spec)
         compute = st.flops / (spec.peak(_compute_dtype(d)) * st.mxu_util)
@@ -386,14 +427,14 @@ def isolated_time_batch(
     memory = st.hbm_bytes / bw
     # fill/drain bubbles: first/last tiles can't overlap DMA with compute
     ramp = spec.pipeline_fill_tiles * (st.hbm_bytes / st.n_tiles / bw)
-    launches = np.where(st.splits > 1, 2.0, 1.0)
+    launches = np.where((st.splits > 1) | (st.streams > 0), 2.0, 1.0)
     return (np.maximum(compute, memory) + ramp
             + launches * spec.launch_overhead_s)
 
 
 def group_time_batch(
     d: GemmDesc, t, cds, spec: TPUSpec = DEFAULT_SPEC,
-    pre: TilePrecomp | None = None,
+    pre: TilePrecomp | None = None, tiles_per_cd: bool = False,
 ) -> np.ndarray:
     """Vectorized *homogeneous* `group_time`: ``cd`` identical members per
     group, one group per (cd, tile) pair.  Returns shape
@@ -401,15 +442,30 @@ def group_time_batch(
     (CD share × tile) slot; the member sums use the same left-to-right
     accumulation as the scalar member loop, so results are bitwise equal
     to ``group_time([(d, tile)] * cd)``.
+
+    ``tiles_per_cd=True`` says the tile batch *already carries the CD
+    axis as its leading dim* (shape ``(len(cds), ...)``) — used by the
+    tuner's Stream-K candidates, whose grid size depends on the CD VMEM
+    share — so the share array reshapes onto that axis instead of
+    prepending a new one.
     """
     cds = [int(c) for c in np.atleast_1d(cds)]
     p = pre if pre is not None else tile_precompute(d, t, spec)
     # The CD axis is prepended to whatever batch shape (desc × tile) the
-    # inputs broadcast to.
+    # inputs broadcast to — unless the tiles already carry it in front.
     rest = np.broadcast_shapes(np.shape(p.ws), np.shape(p.n_tiles),
                                np.shape(p.bc_bytes))
-    shares = np.asarray([spec.vmem_bytes // c for c in cds],
-                        np.int64).reshape((len(cds),) + (1,) * len(rest))
+    if tiles_per_cd:
+        if not rest or rest[0] != len(cds):
+            raise ValueError(
+                f"tiles_per_cd=True needs a leading CD axis of {len(cds)}, "
+                f"got batch shape {rest}")
+        shares = np.asarray([spec.vmem_bytes // c for c in cds],
+                            np.int64).reshape((len(cds),)
+                                              + (1,) * (len(rest) - 1))
+    else:
+        shares = np.asarray([spec.vmem_bytes // c for c in cds],
+                            np.int64).reshape((len(cds),) + (1,) * len(rest))
     st = kernel_stats_batch(d, t, vmem_budget=shares, spec=spec, pre=p)
     comp = np.broadcast_to(st.flops / (p.peak * st.mxu_util),
                            st.hbm_bytes.shape)
@@ -435,7 +491,7 @@ def group_time_batch(
     t_exec = overlap * ideal + (1.0 - overlap) * (
         serial * (1.0 + 0.25 * np.maximum(0.0, pressure - 1.0))
     )
-    launches = np.where(st.splits > 1, 2.0, 1.0)
+    launches = np.where((st.splits > 1) | (st.streams > 0), 2.0, 1.0)
     return t_exec + ramp + launches * spec.launch_overhead_s
 
 
@@ -515,13 +571,13 @@ def group_time(
     total_ws = _fold(st.vmem_bytes)
     return _compose_group_time(
         sum_c, sum_m, serial, total_ws, float(np.max(ramps)),
-        bool(np.any(st.splits > 1)), spec,
+        bool(np.any((st.splits > 1) | (st.streams > 0))), spec,
     )
 
 
 def _compose_group_time(
     sum_c: float, sum_m: float, serial: float, total_ws: float,
-    max_ramp: float, any_split: bool, spec: TPUSpec,
+    max_ramp: float, any_epilogue: bool, spec: TPUSpec,
 ) -> float:
     """The overlap/pressure composition for one grouped launch (§2): both
     live scalar paths — the GEMM fold (`group_time`) and the mixed-family
@@ -535,7 +591,7 @@ def _compose_group_time(
     t_exec = overlap * ideal + (1.0 - overlap) * (
         serial * (1.0 + 0.25 * max(0.0, pressure - 1.0))
     )
-    launches = 2.0 if any_split else 1.0
+    launches = 2.0 if any_epilogue else 1.0
     return t_exec + max_ramp + launches * spec.launch_overhead_s
 
 
@@ -561,7 +617,7 @@ def _group_time_mixed(members, share: int, spec: TPUSpec) -> float:
     through the same overlap/pressure math as the GEMM fold (the ACS-style
     shared resource model — each member sees a 1/G VMEM share)."""
     comps, mems, sers, wss, ramps = [], [], [], [], []
-    any_split = False
+    any_epilogue = False
     for d, t in members:
         st = kernel_stats_batch(d, t, vmem_budget=share, spec=spec).item()
         peak = spec.peak(_compute_dtype(d))
@@ -571,10 +627,10 @@ def _group_time_mixed(members, share: int, spec: TPUSpec) -> float:
                      * (st.hbm_bytes / st.n_tiles / spec.hbm_bw))
         sers.append(max(comps[-1], mems[-1]))
         wss.append(st.vmem_bytes)
-        any_split = any_split or st.splits > 1
+        any_epilogue = any_epilogue or st.splits > 1 or st.streams > 0
     return _compose_group_time(
         sum(comps), sum(mems), sum(sers), sum(wss), max(ramps),
-        any_split, spec,
+        any_epilogue, spec,
     )
 
 
@@ -603,6 +659,15 @@ def kernel_stats_ref(
     tm, tn, tk = _cdiv(d.M, bm), _cdiv(d.N, bn), _cdiv(d.K, bk)
     s = min(t.split_k, tk)
     n_tiles = tm * tn * s * d.batch
+    sk = t.stream_k
+    total = tm * tn * tk * d.batch
+    ipw = _cdiv(total, max(min(sk, total), 1))
+    g_live = _cdiv(total, ipw)
+    if sk > 0:
+        n_tiles = g_live
+        streams = g_live
+    else:
+        streams = 0
 
     ws = (2 * (bm * bk + bk * bn) * d.in_bytes
           + bm * bn * 4 + bm * bn * d.in_bytes)
@@ -613,6 +678,10 @@ def kernel_stats_ref(
     b_bytes = tm * (d.K * d.N * d.in_bytes * d.batch) * b_stream
     c_bytes = d.M * d.N * d.in_bytes * d.batch
     part_bytes = s * (2 * (d.M * d.N * 4) * d.batch) if s > 1 else 0.0
+    if sk > 0:
+        period = tk // math.gcd(ipw, tk)
+        straddle = (g_live - 1) - (g_live - 1) // period
+        part_bytes = straddle * (2.0 * (bm * bn * 4))
     bc_bytes = (b_bytes + c_bytes) + part_bytes
 
     resid_frac = min(max((budget - ws) / a_panel, 0.0), 1.0)
@@ -639,6 +708,7 @@ def kernel_stats_ref(
         mxu_util=util,
         a_resident=a_resident,
         splits=s,
+        streams=streams,
     )
 
 
@@ -651,7 +721,7 @@ def isolated_time_ref(
     bw = spec.hbm_bw * bw_frac
     memory = st.hbm_bytes / bw
     ramp = spec.pipeline_fill_tiles * (st.hbm_bytes / st.n_tiles / bw)
-    launches = 2.0 if st.splits > 1 else 1.0
+    launches = 2.0 if (st.splits > 1 or st.streams > 0) else 1.0
     return max(compute, memory) + ramp + launches * spec.launch_overhead_s
 
 
@@ -673,7 +743,7 @@ def group_time_ref(
                      * (st.hbm_bytes / st.n_tiles / spec.hbm_bw))
         sers.append(max(comps[-1], mems[-1]))
         wss.append(st.vmem_bytes)
-        any_split = any_split or st.splits > 1
+        any_split = any_split or st.splits > 1 or st.streams > 0
     pressure = sum(wss) / spec.vmem_bytes
     overlap = min(1.0, 1.0 / pressure) if pressure > 0 else 1.0
     ideal = max(sum(comps), sum(mems))
@@ -748,6 +818,7 @@ def attention_stats_batch(
         hbm_bytes=np.asarray(hbm), flops=np.asarray(flops),
         mxu_util=np.asarray(util), a_resident=np.asarray(kv_resident),
         splits=np.ones_like(np.asarray(n_tiles)),
+        streams=np.zeros_like(np.asarray(n_tiles)),
     )
 
 
@@ -807,6 +878,7 @@ def grouped_stats_batch(
         hbm_bytes=np.asarray(hbm), flops=np.asarray(flops),
         mxu_util=np.asarray(util), a_resident=np.asarray(a_resident),
         splits=np.ones_like(np.asarray(n_tiles)),
+        streams=np.zeros_like(np.asarray(n_tiles)),
     )
 
 
@@ -853,6 +925,7 @@ def scan_stats_batch(
         mxu_util=np.asarray(util),
         a_resident=np.zeros(np.shape(np.asarray(ws)), bool),
         splits=np.ones_like(np.asarray(n_tiles)),
+        streams=np.zeros_like(np.asarray(n_tiles)),
     )
 
 

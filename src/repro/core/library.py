@@ -8,17 +8,24 @@ vendor BLAS tuning cache.
 
 The on-disk blob is versioned (``SCHEMA_VERSION``): v2 added the split-K
 axis to persisted tiles (4-element lists) and wrapped entries under a
-``{"schema": 2, "entries": ...}`` envelope; v3 (DESIGN.md §14) adds the
-per-entry ``family`` field for the heterogeneous kernel zoo.  Loading is
-backward compatible with version-appropriate trust:
+``{"schema": 2, "entries": ...}`` envelope; v3 (DESIGN.md §14) added the
+per-entry ``family`` field for the heterogeneous kernel zoo; v4
+(DESIGN.md §15) adds the Stream-K axis to persisted tiles (5-element
+lists ``[bm, bn, bk, split_k, stream_k]``) and switches `save` to
+compact JSON (no indent, tight separators — committed libraries carry
+hundreds of entries and the pretty form was ~2× the bytes for a blob
+only machines read).  Loading is backward compatible with
+version-appropriate trust:
 
 - a bare v1 blob parses, but its entries were tuned on a pre-split-K
   search space — stale, so they are **discarded** with a warning and
   re-tuned lazily;
-- a v2 blob's entries were tuned on the *same GEMM search space* v3
-  uses (v3 only widened the schema to non-GEMM families), so they are
-  **preserved bitwise** with the family defaulting to ``"gemm"`` — a
-  migration warning notes the rewrite that the next `save` performs.
+- v2/v3 blobs' entries were tuned on the *same GEMM search space* v4
+  widens (Stream-K adds candidates without perturbing the old ones, and
+  the argmin tie-break is strict), so they are **preserved bitwise** —
+  short tile lists default ``stream_k=0`` (and v2 the family
+  ``"gemm"``); a migration warning notes the rewrite that the next
+  `save` performs.
 """
 from __future__ import annotations
 
@@ -37,16 +44,19 @@ from repro.kernels.gemm.ops import TileConfig
 
 # Bump whenever the persisted format OR the tuning search space changes in
 # a way that invalidates stored entries (v2: split-K axis + bm 8-32 rows;
-# v3: per-entry kernel family — v2 GEMM entries stay valid).
-SCHEMA_VERSION = 3
+# v3: per-entry kernel family; v4: Stream-K axis + compact JSON — v2/v3
+# entries stay valid).
+SCHEMA_VERSION = 4
 
 
 def _tile_to_list(t: TileConfig) -> list[int]:
-    return [t.bm, t.bn, t.bk, t.split_k]
+    return [t.bm, t.bn, t.bk, t.split_k, t.stream_k]
 
 
 def _tile_from_list(v) -> TileConfig:
-    return TileConfig(*v)  # 3-element (v1) lists default split_k=1
+    # 3-element (v1) lists default split_k=1; ≤4-element (v2/v3) lists
+    # default stream_k=0 — both exact, so migration is bitwise.
+    return TileConfig(*v)
 
 
 class GOLibrary:
@@ -134,18 +144,23 @@ class GOLibrary:
             },
         }
         tmp = path.with_suffix(".tmp")
-        tmp.write_text(json.dumps(blob, indent=1))
+        # Compact serialization (satellite of DESIGN.md §15): committed
+        # libraries are machine-read only, so drop the indent and the
+        # default ", "/": " separator padding.
+        tmp.write_text(json.dumps(blob, separators=(",", ":")))
         tmp.replace(path)
 
     def load(self, path: str | os.PathLike) -> int:
-        """Parse a v1, v2, or v3 blob; returns the file's schema version.
+        """Parse a v1–v4 blob; returns the file's schema version.
 
         v1 entries are *discarded* (tuned on the pre-split-K search space
-        — they would mis-plan, DESIGN.md §13) and re-tuned lazily.  v2
-        entries are *preserved bitwise* under the family default
-        ``"gemm"`` (v3 changed the envelope, not the GEMM search space,
-        DESIGN.md §14) — a migration warning notes that the next `save`
-        rewrites the file at v3."""
+        — they would mis-plan, DESIGN.md §13) and re-tuned lazily.
+        v2/v3 entries are *preserved bitwise* — short tile lists default
+        ``stream_k=0`` (and v2 the family ``"gemm"``); v4 only widened
+        the Step-② candidate set with a strict tie-break, so old picks
+        remain exactly what the current tuner would keep (DESIGN.md
+        §15) — a migration warning notes that the next `save` rewrites
+        the file at v4."""
         blob = json.loads(Path(path).read_text())
         if isinstance(blob, dict) and "schema" in blob:
             schema, entries = int(blob["schema"]), blob["entries"]

@@ -2,12 +2,12 @@
 
 Multi-class (one-vs-rest softmax) logistic regression in pure JAX:
     P = softmax(X @ W);  CD_exec = min(argmax P, available GEMMs)
-Classes: {1S, 2P, 4P, 8P, 16P}.  Features (paper Fig. 7b): log2 GEMM dims
+Classes: {1S} ∪ {cP : c ∈ CDS}.  Features (paper Fig. 7b): log2 GEMM dims
 (M, N, K) + per-CD kernel features (log2 #WGs, occupancy, log2 #waves) of
 the GO kernels — capturing input, implementation, and hardware
-properties.  That is 3 + 3·|CDS| dims — 15 with the default CDS of
-(2, 4, 8, 16); `gemm_features` derives the count from CDS, so extending
-the class list extends the vector.  Min-max normalized; trained offline
+properties.  That is 3 + 3·|CDS| dims — 27 with the default CDS of
+(2, 3, 4, 5, 6, 7, 8, 16); `gemm_features` derives the count from CDS, so
+extending the class list extends the vector.  Min-max normalized; trained offline
 once per chip spec on a profiled dataset of 1072 GEMMs (paper §5.2
 count), 90/10 split.  The TPU meanings of #WGs/occupancy/#waves are
 defined in DESIGN.md §2.
@@ -34,13 +34,13 @@ from repro.core.gemm_desc import GemmDesc
 from repro.core.library import GOLibrary
 from repro.core.tuner import CDS
 
-CLASSES = (1,) + tuple(CDS)  # 1S, 2P, 4P, 8P, 16P
+CLASSES = (1,) + tuple(CDS)  # 1S, 2P, …, 8P, 16P
 
 
 def op_features(
     desc, lib: GOLibrary, spec: TPUSpec = DEFAULT_SPEC
 ) -> np.ndarray:
-    """Family-generic feature vector (3 + 3·|CDS| dims; 15 by default):
+    """Family-generic feature vector (3 + 3·|CDS| dims; 27 by default):
     log2 of the family's (M, N, K)-like size triple (`OpDesc.mnk_like` —
     for a GEMM literally M, N, K) + per-CD (log2 #WGs, occupancy,
     log2 #waves) of the GO kernels — see DESIGN.md §4/§14.  The layout is

@@ -16,11 +16,20 @@ step ② one `group_time_batch` over (RC winner × split-K) × CD.  The
 pre-vectorization scalar loops survive as `tune_gemm_reference` — the
 parity oracle and the wall-clock baseline for `benchmarks/tuning.py`.
 
-The search space covers decode-friendly ``bm ∈ {8, 16, 32}`` rows and the
-**split-K** axis (`TileConfig.split_k`, DESIGN.md §13): for skinny GEMMs
-whose (m, n) grid collapses to one tile, splitting the K sweep is the only
-way to add parallel tiles, trading a small partial-C round-trip for an
-``s×`` smaller fill/drain ramp.
+The search space covers decode-friendly ``bm ∈ {8, 16, 32}`` rows and two
+work decompositions (Step ② / GO-time axes):
+
+- **split-K** (`TileConfig.split_k`, DESIGN.md §13): for skinny GEMMs
+  whose (m, n) grid collapses to one tile, splitting the K sweep is the
+  only way to add parallel tiles, trading a small partial-C round-trip
+  for an ``s×`` smaller fill/drain ramp;
+- **Stream-K** (`TileConfig.stream_k`, DESIGN.md §15): the work-centric
+  generalization — a persistent grid sized to the *CD's* share of the
+  pipeline slots walks equal spans of the MAC-iteration sequence, so the
+  grid is flat by construction and the partial-C charge shrinks to the
+  straddled tiles.  Because the right grid size depends on the CD's
+  VMEM share, Stream-K candidates vary **per CD** — Step ②'s sweep
+  carries the CD axis on the candidate tiles (``tiles_per_cd``).
 """
 from __future__ import annotations
 
@@ -49,7 +58,12 @@ from repro.core.gemm_desc import GemmDesc
 from repro.core.op_desc import family_of
 from repro.kernels.gemm.ops import TileConfig
 
-CDS = (2, 4, 8, 16)
+# Tuned concurrency degrees.  The dense 2-8 range exists for Stream-K:
+# odd CDs are exactly where tile- and split-K grids quantize badly against
+# the CD's slot share, while a Stream-K grid stays flat — a power-of-two
+# CDS would hide the axis's main wins (and serving traces bucket to the
+# nearest tuned CD, so odd groups used to mis-plan).
+CDS = (2, 3, 4, 5, 6, 7, 8, 16)
 
 # The kernel-implementation search space (BlockSpec tilings).  bm rows 8-32
 # are the decode-friendly additions: for M ≤ mxu they cost nothing (padded
@@ -63,9 +77,11 @@ CANDIDATE_TILES: tuple[TileConfig, ...] = tuple(
 
 # Split-K decomposition axis (DESIGN.md §13); 1 first so argmin tie-breaks
 # keep the un-split kernel.  Split-K enters at Step ② only: it is a
-# GO-time decision (recovering occupancy under a CD's resource share, the
-# Stream-K mechanism) — letting it into Step ① would crowd the RC-winner
-# slots out of the fat-bn tiles grouped execution needs.
+# GO-time decision (recovering occupancy under a CD's resource share) —
+# letting it into Step ① would crowd the RC-winner slots out of the
+# fat-bn tiles grouped execution needs.  The Stream-K axis (DESIGN.md
+# §15) enters at the same point, but its candidates are built per CD
+# (grid = the CD share's slot count), not from a static list.
 SPLIT_K_CANDIDATES: tuple[int, ...] = (1, 2, 4, 8)
 
 # The pre-split-K space of the original scalar tuner — kept for the
@@ -80,6 +96,16 @@ LEGACY_CANDIDATE_TILES: tuple[TileConfig, ...] = tuple(
 FALLBACK_TILE = TileConfig(128, 128, 128)
 
 _SEARCH = TileBatch.from_tiles(CANDIDATE_TILES)
+
+
+def stream_k_grid(ws, share, spec: TPUSpec = DEFAULT_SPEC):
+    """Stream-K workgroup budget for a tile working set under a VMEM
+    share: as many persistent workgroups as the share holds instances,
+    capped at the pipeline slot ceiling (the same ``pipeline_fill_tiles
+    · 4`` in-flight bound the wave model uses) and floored at 1.
+    Broadcasts — ``ws``/``share`` may be arrays."""
+    return np.clip(np.asarray(share) // np.asarray(ws), 1,
+                   spec.pipeline_fill_tiles * 4).astype(np.int64)
 
 # ------------------------------------------- family tile axes (§14)
 # Non-GEMM families reuse the `TileConfig` container with family-specific
@@ -175,17 +201,24 @@ def tune_gemm_batch(
     tiles: Sequence[TileConfig] | None = None,
     split_ks: Sequence[int] | None = None,
     chunk: int = 512,
+    stream_k: bool = True,
 ) -> list[GOEntry]:
     """Vectorized Step ① + Step ② for a whole *pool* of GEMMs.
 
     Everything broadcasts: Step ① is ONE model evaluation of shape
     ``(RC fractions × descs × tiles)``, Step ② ONE of
-    ``(CDs × descs × RC·split-K candidates)`` — this is where batching
-    pays: NumPy dispatch overhead amortizes across the pool, so per-GEMM
-    tuning cost collapses to array throughput (`benchmarks/tuning.py`
-    measures the ratio vs the scalar sweep).  Entries are bitwise
-    identical to per-GEMM `tune_gemm` / `tune_gemm_reference` results on
-    the same search space.
+    ``(CDs × descs × candidates)`` where the candidates are each RC
+    winner × split-K factor plus (``stream_k=True``) one *Stream-K*
+    variant of each RC winner whose grid is sized to that CD's VMEM
+    share (`stream_k_grid`) — the only candidate axis that varies per
+    CD, carried via ``group_time_batch(..., tiles_per_cd=True)``.  This
+    is where batching pays: NumPy dispatch overhead amortizes across the
+    pool, so per-GEMM tuning cost collapses to array throughput
+    (`benchmarks/tuning.py` measures the ratio vs the scalar sweep).
+    Entries are bitwise identical to per-GEMM `tune_gemm` /
+    `tune_gemm_reference` results on the same search space; the
+    tile/split-K candidates come first, so the argmin's first-occurrence
+    tie-break means Stream-K only ever wins *strictly*.
     """
     descs = list(descs)
     if not descs:
@@ -194,7 +227,7 @@ def tune_gemm_batch(
         out: list[GOEntry] = []
         for i in range(0, len(descs), chunk):
             out += tune_gemm_batch(descs[i:i + chunk], spec, cds, tiles,
-                                   split_ks, chunk)
+                                   split_ks, chunk, stream_k)
         return out
     search = _SEARCH if tiles is None else TileBatch.from_tiles(tiles)
     split_ks = tuple(split_ks) if split_ks is not None else SPLIT_K_CANDIDATES
@@ -224,24 +257,61 @@ def tune_gemm_batch(
         bad = np.isinf(min_t).any(0)
         good = [d for i, d in enumerate(descs) if not bad[i]]
         fixed = {d.key(): _tune_gemm_infeasible(d, spec, cds, search,
-                                                split_ks)
+                                                split_ks, stream_k)
                  for i, d in enumerate(descs) if bad[i]}
-        good_entries = iter(tune_gemm_batch(good, spec, cds, tiles, split_ks))
+        good_entries = iter(tune_gemm_batch(good, spec, cds, tiles, split_ks,
+                                            chunk, stream_k))
         return [fixed.get(d.key()) or next(good_entries) for d in descs]
     seq_1 = min_t[0]                                         # (D,)
     wbm, wbn, wbk = search.bm[idx], search.bn[idx], search.bk[idx]  # (RC, D)
 
-    # Step ②: (CD, desc, RC winner × split-K) sweep in one evaluation —
-    # split-K is a GO-time decision: the best decomposition under a CD's
-    # resource share can differ from the isolated one.  Duplicate winner
+    # Step ②: (CD, desc, candidate) sweep in one evaluation — the
+    # decomposition is a GO-time decision: the best one under a CD's
+    # resource share can differ from the isolated pick.  Duplicate winner
     # tiles keep their first RC name via the argmin tie-break, matching
-    # the scalar sweep's strict-less comparison.
+    # the scalar sweep's strict-less comparison.  Candidate layout along
+    # the last axis: RC·S tile/split-K slots first, then (stream_k) one
+    # Stream-K slot per RC winner — first-occurrence argmin therefore
+    # requires Stream-K to beat every legacy candidate outright.
     cand_bm = np.repeat(wbm.T, S, axis=1)                    # (D, RC·S)
     cand_bn = np.repeat(wbn.T, S, axis=1)
     cand_bk = np.repeat(wbk.T, S, axis=1)
     cand_split = np.tile(np.asarray(split_ks, np.int64), len(names))
-    tb2 = TileBatch(bm=cand_bm, bn=cand_bn, bk=cand_bk, split_k=cand_split)
-    gt = group_time_batch(d2, tb2, cds, spec)                # (CD, D, RC·S)
+    if stream_k:
+        R, D, C = len(names), len(descs), len(names) * S
+        shares = np.asarray([spec.vmem_bytes // cd for cd in cds],
+                            np.int64)
+        # Raw working set of each RC winner (the feasibility metric) sets
+        # its per-CD persistent grid.
+        ws_win = ws_raw[np.arange(D)[None, :], idx]          # (RC, D)
+        grids = stream_k_grid(ws_win[None], shares[:, None, None],
+                              spec)                          # (CD, RC, D)
+        grids = np.swapaxes(grids, 1, 2)                     # (CD, D, RC)
+        shape = (len(cds), D, C + R)
+        full = {}
+        for name, legacy, stream in (
+            ("bm", cand_bm, wbm.T), ("bn", cand_bn, wbn.T),
+            ("bk", cand_bk, wbk.T),
+        ):
+            full[name] = np.concatenate([
+                np.broadcast_to(legacy, (len(cds),) + legacy.shape),
+                np.broadcast_to(stream, (len(cds),) + stream.shape),
+            ], axis=-1)
+        split_full = np.concatenate([
+            np.broadcast_to(cand_split, (len(cds), D, C)),
+            np.ones((len(cds), D, R), np.int64),
+        ], axis=-1)
+        stream_full = np.concatenate([
+            np.zeros((len(cds), D, C), np.int64), grids], axis=-1)
+        tb2 = TileBatch(bm=full["bm"], bn=full["bn"], bk=full["bk"],
+                        split_k=split_full, stream_k=stream_full)
+        assert tb2.bm.shape == shape
+        gt = group_time_batch(d2, tb2, cds, spec,
+                              tiles_per_cd=True)             # (CD, D, C+R)
+    else:
+        tb2 = TileBatch(bm=cand_bm, bn=cand_bn, bk=cand_bk,
+                        split_k=cand_split)
+        gt = group_time_batch(d2, tb2, cds, spec)            # (CD, D, RC·S)
     jj = gt.argmin(-1)                                       # (CD, D)
     best = np.take_along_axis(gt, jj[..., None], -1)[..., 0]
 
@@ -254,9 +324,16 @@ def tune_gemm_batch(
         )
         for ci, cd in enumerate(cds):
             j = int(jj[ci, i])
-            e.go[cd] = TileConfig(int(cand_bm[i, j]), int(cand_bn[i, j]),
-                                  int(cand_bk[i, j]), int(cand_split[j]))
-            e.rc_source[cd] = names[j // S]
+            if j < len(names) * S:
+                e.go[cd] = TileConfig(int(cand_bm[i, j]), int(cand_bn[i, j]),
+                                      int(cand_bk[i, j]), int(cand_split[j]))
+                e.rc_source[cd] = names[j // S]
+            else:
+                r = j - len(names) * S
+                e.go[cd] = TileConfig(int(wbm[r, i]), int(wbn[r, i]),
+                                      int(wbk[r, i]),
+                                      stream_k=int(grids[ci, i, r]))
+                e.rc_source[cd] = names[r]
             e.speedup[cd] = (float(seq_1[i]) * cd) / float(best[ci, i])
         entries.append(e)
     return entries
@@ -264,23 +341,34 @@ def tune_gemm_batch(
 
 def _tune_gemm_infeasible(
     desc: GemmDesc, spec: TPUSpec, cds: Sequence[int], search: TileBatch,
-    split_ks: Sequence[int],
+    split_ks: Sequence[int], stream_k: bool = True,
 ) -> GOEntry:
     """Per-GEMM path for descs where some RC fraction has no feasible
     tile: `tune_rc` substitutes FALLBACK_TILE exactly like the scalar
-    sweep's ``or [FALLBACK_TILE]``."""
+    sweep's ``or [FALLBACK_TILE]``.  Stream-K candidates are appended
+    per CD (their grid depends on the CD share), legacy-first so ties
+    keep the tile/split-K pick."""
     winners = {name: tune_rc(desc, frac, spec, search)
                for name, frac in RC_FRACTIONS.items()}
     entry = GOEntry(desc_key=desc.key(), isolated=winners["GPU"])
     seq_1 = isolated_time(desc, entry.isolated, spec)
     cand = [(name, replace(t, split_k=s))
             for name, t in winners.items() for s in split_ks]
-    times = group_time_batch(
-        desc, TileBatch.from_tiles([t for _, t in cand]), cds, spec)
-    for row, cd in zip(times, cds):
+    for cd in cds:
+        cand_cd = list(cand)
+        if stream_k:
+            share = spec.vmem_bytes // cd
+            cand_cd += [
+                (name, replace(t, split_k=1, stream_k=int(stream_k_grid(
+                    t.vmem_bytes(desc.in_bytes), share, spec))))
+                for name, t in winners.items()
+            ]
+        row = group_time_batch(
+            desc, TileBatch.from_tiles([t for _, t in cand_cd]), [cd],
+            spec)[0]
         j = int(row.argmin())
-        entry.go[cd] = cand[j][1]
-        entry.rc_source[cd] = cand[j][0]
+        entry.go[cd] = cand_cd[j][1]
+        entry.rc_source[cd] = cand_cd[j][0]
         entry.speedup[cd] = (seq_1 * cd) / float(row[j])
     return entry
 
@@ -291,10 +379,13 @@ def tune_gemm(
     cds: Sequence[int] = CDS,
     tiles: Sequence[TileConfig] | None = None,
     split_ks: Sequence[int] | None = None,
+    stream_k: bool = True,
 ) -> GOEntry:
-    """Vectorized Step ① + Step ② for one GEMM.  ``tiles``/``split_ks``
-    override the search space (benchmarks replay the legacy space)."""
-    return tune_gemm_batch([desc], spec, cds, tiles, split_ks)[0]
+    """Vectorized Step ① + Step ② for one GEMM.  ``tiles``/``split_ks``/
+    ``stream_k`` override the search space (benchmarks replay the legacy
+    space)."""
+    return tune_gemm_batch([desc], spec, cds, tiles, split_ks,
+                           stream_k=stream_k)[0]
 
 
 def tune_op(

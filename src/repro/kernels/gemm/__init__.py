@@ -1,4 +1,4 @@
 from repro.kernels.gemm.ops import TileConfig, gemm
-from repro.kernels.gemm.ref import gemm_ref
+from repro.kernels.gemm.ref import gemm_ref, gemm_stream_k_ref
 
-__all__ = ["TileConfig", "gemm", "gemm_ref"]
+__all__ = ["TileConfig", "gemm", "gemm_ref", "gemm_stream_k_ref"]

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.dispatch import interpret_mode, use_pallas
-from repro.kernels.gemm.kernel import matmul_pallas
+from repro.kernels.gemm.kernel import matmul_pallas, matmul_stream_k
 from repro.kernels.gemm.ref import gemm_ref
 
 
@@ -21,22 +21,37 @@ from repro.kernels.gemm.ref import gemm_ref
 class TileConfig:
     """BlockSpec tiling — the tunable kernel 'implementation' of the paper.
 
-    ``split_k > 1`` partitions the sequential K sweep into that many
-    independent grid slices, each accumulating an f32 partial C that a
-    reduce epilogue sums (DESIGN.md §13) — the Stream-K-style decomposition
-    axis that recovers pipeline occupancy for skinny/decode GEMMs.
+    Two work decompositions ride on top of the (bm, bn, bk) tiling
+    (DESIGN.md §13, §15); they are mutually exclusive:
+
+    - ``split_k > 1`` partitions the sequential K sweep into that many
+      independent grid slices, each accumulating an f32 partial C that a
+      reduce epilogue sums — the fixed-s special case that recovers
+      pipeline occupancy for skinny/decode GEMMs;
+    - ``stream_k > 0`` runs the *Stream-K* persistent kernel on exactly
+      that many workgroups: every workgroup walks a contiguous span of
+      the global MAC-iteration sequence, and tiles straddling workgroup
+      boundaries are reconciled by a masked fixup pass.
     """
 
     bm: int = 256
     bn: int = 256
     bk: int = 256
     split_k: int = 1
+    stream_k: int = 0
+
+    def __post_init__(self):
+        if self.stream_k > 0 and self.split_k > 1:
+            raise ValueError(
+                f"split_k={self.split_k} and stream_k={self.stream_k} are "
+                "mutually exclusive decompositions")
 
     def vmem_bytes(self, in_bytes: int = 2, acc_bytes: int = 4) -> int:
         """Working set: double-buffered A/B tiles + f32 accumulator + C out.
 
-        Per-slice working set is independent of ``split_k``: each slice
-        holds the same tile buffers, and partials live in HBM."""
+        Per-instance working set is independent of ``split_k`` and
+        ``stream_k``: each grid instance holds the same tile buffers, and
+        partials live in HBM."""
         ab = 2 * (self.bm * self.bk + self.bk * self.bn) * in_bytes
         acc = self.bm * self.bn * acc_bytes
         out = self.bm * self.bn * in_bytes
@@ -44,7 +59,11 @@ class TileConfig:
 
     def key(self) -> str:
         base = f"{self.bm}x{self.bn}x{self.bk}"
-        return base if self.split_k == 1 else f"{base}s{self.split_k}"
+        if self.split_k != 1:
+            base += f"s{self.split_k}"
+        if self.stream_k:
+            base += f"g{self.stream_k}"
+        return base
 
 
 def _pad_to(x: jax.Array, multiples: tuple[int, int]) -> jax.Array:
@@ -61,6 +80,27 @@ def _gemm(a, b, ta, tb, tile, out_dtype, interpret, force_ref):
     M = a.shape[1] if ta else a.shape[0]
     N = b.shape[0] if tb else b.shape[1]
     K = a.shape[0] if ta else a.shape[1]
+    if tile.stream_k > 0:
+        # Stream-K: pad every dim to a plain tile multiple (ragged K needs
+        # only a bk multiple — the iteration walk absorbs any tile count)
+        # and hand the padded problem to the persistent-grid kernel.
+        a_p = _pad_to(a, (tile.bk, tile.bm) if ta else (tile.bm, tile.bk))
+        b_p = _pad_to(b, (tile.bn, tile.bk) if tb else (tile.bk, tile.bn))
+        out = matmul_stream_k(
+            a_p,
+            b_p,
+            ta=ta,
+            tb=tb,
+            bm=tile.bm,
+            bn=tile.bn,
+            bk=tile.bk,
+            grid_g=tile.stream_k,
+            out_dtype=out_dtype,
+            interpret=interpret,
+        )
+        if out.shape != (M, N):
+            out = out[:M, :N]
+        return out
     # Effective split: never more slices than k tiles; zero-pad K to a
     # (bk · split) multiple so every slice sweeps equally many k tiles.
     split = max(1, min(tile.split_k, -(-K // tile.bk)))

@@ -3,6 +3,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def gemm_ref(a, b, *, ta: bool = False, tb: bool = False, out_dtype=None):
@@ -10,3 +11,48 @@ def gemm_ref(a, b, *, ta: bool = False, tb: bool = False, out_dtype=None):
     a_ = a.T if ta else a
     b_ = b.T if tb else b
     return jnp.dot(a_, b_, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def gemm_stream_k_ref(
+    a, b, *, bm: int, bn: int, bk: int, grid_g: int,
+    ta: bool = False, tb: bool = False, out_dtype=None,
+):
+    """Pure-Python mirror of the Stream-K decomposition (DESIGN.md §15).
+
+    Walks the same global MAC-iteration spans as `matmul_stream_k` — per
+    output tile, each contributing workgroup's span accumulates its block
+    dots in ascending-k order into an f32 partial, and the partials sum in
+    ascending-workgroup (slot) order — with NumPy block products instead
+    of a pallas grid.  Dropped or double-counted iterations show up as a
+    plain numeric mismatch against `gemm_ref`, which is what the ragged
+    bitwise tests assert (integer-valued inputs make every summation
+    association exact)."""
+    out_dtype = out_dtype or a.dtype
+    A = np.asarray(jnp.asarray(a.T if ta else a, jnp.float32))
+    B = np.asarray(jnp.asarray(b.T if tb else b, jnp.float32))
+    M, K = A.shape
+    _, N = B.shape
+    Mp, Np, Kp = -(-M // bm) * bm, -(-N // bn) * bn, -(-K // bk) * bk
+    Ap = np.zeros((Mp, Kp), np.float32)
+    Ap[:M, :K] = A
+    Bp = np.zeros((Kp, Np), np.float32)
+    Bp[:K, :N] = B
+    tm, tn, tk = Mp // bm, Np // bn, Kp // bk
+    total = tm * tn * tk
+    ipw = -(-total // max(1, min(grid_g, total)))
+    out = np.zeros((Mp, Np), np.float32)
+    for q in range(tm * tn):
+        m, n = divmod(q, tn)
+        g_first, g_last = (q * tk) // ipw, ((q + 1) * tk - 1) // ipw
+        acc = np.zeros((bm, bn), np.float32)
+        for g in range(g_first, g_last + 1):
+            lo = max(q * tk, g * ipw)
+            hi = min((q + 1) * tk, (g + 1) * ipw)
+            part = np.zeros((bm, bn), np.float32)
+            for i in range(lo, hi):
+                k = i - q * tk
+                part += Ap[m * bm:(m + 1) * bm, k * bk:(k + 1) * bk] \
+                    @ Bp[k * bk:(k + 1) * bk, n * bn:(n + 1) * bn]
+            acc += part
+        out[m * bm:(m + 1) * bm, n * bn:(n + 1) * bn] = acc
+    return jnp.asarray(out[:M, :N]).astype(out_dtype)

@@ -22,9 +22,12 @@ def _dataset(n=256, seed=5):
 
 
 def test_features_shape_and_finite():
+    from repro.core.tuner import CDS
+
     lib = GOLibrary()
     x = gemm_features(GemmDesc(4096, 512, 1024), lib)
-    assert x.shape == (15,) and np.isfinite(x).all()
+    assert x.shape == (3 + 3 * len(CDS),) and np.isfinite(x).all()
+    assert len(CLASSES) == 1 + len(CDS)
 
 
 def test_training_beats_majority_class():

@@ -102,10 +102,11 @@ def test_tile_for_cd_falls_forward_below_smallest_tuned_cd():
 
 def test_split_k_go_kernel_wins_for_decode_class():
     """Acceptance: split-K GO kernels win (modeled) for a skinny/decode
-    class at CD ≥ 8, vs the best un-split kernel on the same space."""
+    class at CD ≥ 8, vs the best un-split kernel on the same space
+    (Stream-K disabled on both sides — it has its own test below)."""
     d = GemmDesc(8, 128, 16384)
-    e = tune_gemm(d)
-    e_unsplit = tune_gemm(d, split_ks=(1,))
+    e = tune_gemm(d, stream_k=False)
+    e_unsplit = tune_gemm(d, split_ks=(1,), stream_k=False)
     for cd in (8, 16):
         assert e.go[cd].split_k > 1, e.go
         t_split = group_time([(d, e.go[cd])] * cd)
@@ -118,19 +119,55 @@ def test_split_k_go_kernel_wins_for_decode_class():
     )
 
 
+def test_stream_k_go_kernel_wins_for_decode_class_odd_cds():
+    """Acceptance (DESIGN.md §15): with the full candidate set, the
+    decode class picks a Stream-K GO kernel at the odd CDs — where
+    tile/split-K grids quantize worst against the CD share — and its
+    modeled group time is *strictly* better than the best tile/split-K
+    candidate (the argmin tie-break keeps legacy kernels on ties, so a
+    Stream-K pick is itself proof of a strict win; assert it anyway)."""
+    d = GemmDesc(8, 128, 16384)
+    e = tune_gemm(d)
+    e_legacy = tune_gemm(d, stream_k=False)
+    for cd in (3, 5, 6, 7):
+        t = e.go[cd]
+        assert t.stream_k > 0 and t.split_k == 1, (cd, e.go)
+        assert group_time([(d, t)] * cd) \
+            < group_time([(d, e_legacy.go[cd])] * cd)
+    # the stream grid never exceeds the pipeline slot ceiling
+    ceil = DEFAULT_SPEC.pipeline_fill_tiles * 4
+    assert all(t.stream_k <= ceil for t in e.go.values())
+
+
 # ------------------------------------------------------------- persistence
-def test_library_schema_v2_roundtrip_preserves_split_k(tmp_path):
+def test_library_schema_roundtrip_preserves_decompositions(tmp_path):
     lib = GOLibrary()
-    d = GemmDesc(8, 128, 16384)           # decode class ⇒ split-K GO tiles
+    d = GemmDesc(8, 128, 16384)           # decode class ⇒ stream-K GO tiles
     e = lib.get(d)
-    assert any(t.split_k > 1 for t in e.go.values())
+    assert any(t.stream_k > 0 for t in e.go.values())
     p = tmp_path / "golib.json"
     lib.save(p)
     blob = json.loads(p.read_text())
     assert blob["schema"] == SCHEMA_VERSION
+    # v4 persists 5-element [bm, bn, bk, split_k, stream_k] tiles
+    assert all(len(t) == 5 for v in blob["entries"].values()
+               for t in [v["isolated"], *v["go"].values()])
     lib2 = GOLibrary(p)
     assert lib2.loaded_schema == SCHEMA_VERSION
     assert lib2.get(d).go == e.go
+
+
+def test_library_save_is_compact_json(tmp_path):
+    """Committed libraries are machine-read only: the v4 serializer drops
+    the indent and separator padding (satellite of DESIGN.md §15)."""
+    lib = GOLibrary()
+    lib.get(GemmDesc(512, 512, 512))
+    p = tmp_path / "golib.json"
+    lib.save(p)
+    text = p.read_text()
+    assert "\n" not in text and ": " not in text and ", " not in text
+    # and it still round-trips
+    assert GOLibrary(p).entries().keys() == lib.entries().keys()
 
 
 def test_library_stale_schema_discarded_with_warning(tmp_path):

@@ -1,5 +1,6 @@
-"""Batched cost model: bitwise parity with the scalar path, split-K
-accounting, and evaluation-count bookkeeping (DESIGN.md §13)."""
+"""Batched cost model: bitwise parity with the scalar path, split-K and
+Stream-K accounting, and evaluation-count bookkeeping (DESIGN.md §13,
+§15)."""
 import numpy as np
 import pytest
 
@@ -31,7 +32,7 @@ from repro.core.tuner import (
 from repro.kernels.gemm.ops import TileConfig
 
 STAT_FIELDS = ("n_tiles", "waves", "occupancy", "vmem_bytes", "hbm_bytes",
-               "flops", "mxu_util", "a_resident", "splits")
+               "flops", "mxu_util", "a_resident", "splits", "streams")
 
 DESCS = [
     GemmDesc(8, 128, 16384),                      # decode/skinny
@@ -45,14 +46,21 @@ FRACS = (1.0, 0.5, 0.25)
 
 
 def _grid_tiles():
-    return [TileConfig(t.bm, t.bn, t.bk, s)
-            for t in CANDIDATE_TILES for s in SPLIT_K_CANDIDATES]
+    tiles = [TileConfig(t.bm, t.bn, t.bk, s)
+             for t in CANDIDATE_TILES for s in SPLIT_K_CANDIDATES]
+    # Stream-K corners: grids below/at/above the pipeline-slot ceiling,
+    # odd counts, and G=1 (degenerate single persistent workgroup).
+    tiles += [TileConfig(t.bm, t.bn, t.bk, stream_k=g)
+              for t in (TileConfig(8, 128, 512), TileConfig(128, 256, 256),
+                        TileConfig(512, 512, 512))
+              for g in (1, 3, 7, 8, 16)]
+    return tiles
 
 
 def test_batch_scalar_reference_parity_bitwise():
     """Acceptance: batch == scalar wrapper == pure-Python reference,
     bitwise, over the full candidate grid × RC fractions × CDs (split-K
-    included)."""
+    and Stream-K included)."""
     tiles = _grid_tiles()
     tb = TileBatch.from_tiles(tiles)
     for d in DESCS:
@@ -141,6 +149,53 @@ def test_split_k_recovers_ramp_for_single_tile_gemms():
     assert group_time([(d, t4)] * 8) < group_time([(d, t1)] * 8)
 
 
+# ---------------------------------------------------------------- stream-K
+def test_stream_k_flat_grid_and_straddle_traffic():
+    """The §15 occupancy curve: n_tiles is the live grid (flat work per
+    workgroup, no tail quantization) and the only extra traffic is the
+    straddled tiles' partial round-trip — strictly less than split-K's
+    all-tiles charge at matched parallelism."""
+    import math
+
+    d = GemmDesc(8, 128, 16384)                 # 1 output tile, tk=32
+    base = kernel_stats(d, TileConfig(8, 128, 512))
+    st = kernel_stats(d, TileConfig(8, 128, 512, stream_k=8))
+    assert st.streams == 8 and st.n_tiles == 8
+    # straddle count closed form: tk=32, ipw=4 ⇒ period=8 ⇒ 7 boundaries,
+    # none tile-aligned except multiples of period
+    tk, ipw, g = 32, 4, 8
+    period = tk // math.gcd(ipw, tk)
+    straddle = (g - 1) - (g - 1) // period
+    assert st.hbm_bytes == pytest.approx(
+        base.hbm_bytes + straddle * 2 * 8 * 128 * 4, rel=1e-12)
+    sp = kernel_stats(d, TileConfig(8, 128, 512, split_k=8))
+    assert sp.n_tiles == st.n_tiles            # matched parallelism...
+    assert st.hbm_bytes < sp.hbm_bytes         # ...at lower traffic
+
+
+def test_stream_k_grid_clamps_to_total_iterations():
+    d = GemmDesc(256, 256, 256)                # 4 output tiles, tk=1
+    st = kernel_stats(d, TileConfig(128, 128, 256, stream_k=16))
+    assert st.streams == 4 and st.n_tiles == 4  # live grid ≤ total iters
+    # aligned spans (period 1) ⇒ no straddles ⇒ no partial traffic
+    assert st.hbm_bytes == \
+        kernel_stats(d, TileConfig(128, 128, 256)).hbm_bytes
+
+
+def test_stream_k_charges_fixup_launch():
+    d = GemmDesc(8, 128, 16384)
+    t_plain = isolated_time(d, TileConfig(8, 128, 512))
+    t_stream = isolated_time(d, TileConfig(8, 128, 512, stream_k=8))
+    assert t_stream < t_plain                  # ramp win dominates...
+    st = kernel_stats(d, TileConfig(8, 128, 512, stream_k=8))
+    assert st.streams > 0                      # ...but the epilogue is real
+
+
+def test_stream_k_split_k_mutually_exclusive():
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        TileConfig(128, 128, 128, split_k=2, stream_k=4)
+
+
 # ------------------------------------------------------------ eval counter
 def test_eval_counter_counts_batched_elements():
     EVAL_COUNTER.reset()
@@ -163,7 +218,7 @@ def test_tuner_eval_budget_per_gemm():
     EVAL_COUNTER.reset()
     tune_gemm_batch(pool)
     evals, calls = EVAL_COUNTER.snapshot()
-    assert evals / len(pool) <= 300
+    assert evals / len(pool) <= 330
     # constant calls per pool (2 broadcast sweeps), not per GEMM
     assert calls <= 8 + len(pool) // 4
 
@@ -174,10 +229,11 @@ def test_vectorized_tuner_matches_scalar_sweep_bitwise():
     'modeled speedup unchanged' acceptance criterion."""
     pool = DESCS
     batch = tune_gemm_batch(pool, tiles=LEGACY_CANDIDATE_TILES,
-                            split_ks=(1,))
+                            split_ks=(1,), stream_k=False)
     for d, be in zip(pool, batch):
         ref = tune_gemm_reference(d)
-        one = tune_gemm(d, tiles=LEGACY_CANDIDATE_TILES, split_ks=(1,))
+        one = tune_gemm(d, tiles=LEGACY_CANDIDATE_TILES, split_ks=(1,),
+                        stream_k=False)
         assert be.isolated == ref.isolated == one.isolated
         assert be.go == ref.go == one.go
         assert be.rc_source == ref.rc_source == one.rc_source

@@ -6,7 +6,7 @@ Covers the §14 contracts:
 - family tuning (`tune_op`) produces fully-populated, feasible GO entries;
 - §6.7 isolation property: adding non-GEMM ops to a bundle never changes
   the compatibility class or the planned grouping of the GEMM-only subset;
-- GO-library v2 → v3 migration preserves every v2 entry bitwise;
+- GO-library v2 → v4 migration preserves every v2 entry bitwise;
 - the runtime's mixed-bundle queue co-schedules all four kernel families
   with a modeled speedup over sequential and a zero-eval steady state;
 - mixed-group execution routes every family through its real kernel and
@@ -160,7 +160,7 @@ def test_nongemm_ops_never_change_gemm_subset_class(gemms, ops, seed):
     assert _gemm_groups(ctrl, gemm_descs) == _gemm_groups(ctrl, mixed)
 
 
-# ------------------------------------------------------- v2→v3 library
+# ---------------------------------------------------- v2/v3→v4 library
 def _v2_blob(entries):
     return {"schema": 2, "entries": entries}
 
@@ -186,11 +186,12 @@ _V2_TILE = st.tuples(st.sampled_from([8, 64, 256]),
     }),
     min_size=1, max_size=3,
 ))
-def test_v2_to_v3_migration_preserves_entries_bitwise(tmp_path_factory,
+def test_v2_to_v4_migration_preserves_entries_bitwise(tmp_path_factory,
                                                       entries):
-    """Every v2 entry survives the v3 migration bit-for-bit: tiles
-    (split-K included), rc sources, and float speedups unchanged; the
-    re-saved file is v3 with the GEMM family default."""
+    """Every v2 entry survives the v4 migration bit-for-bit: tiles
+    (split-K included, stream_k defaulting to 0), rc sources, and float
+    speedups unchanged; the re-saved file is v4 with the GEMM family
+    default and 5-element tile lists."""
     tmp_path = tmp_path_factory.mktemp("golib_v2")
     blob = _v2_blob({
         k: {**v, "isolated": list(v["isolated"]),
@@ -216,16 +217,62 @@ def test_v2_to_v3_migration_preserves_entries_bitwise(tmp_path_factory,
     for k, v in entries.items():
         sv = saved["entries"][k]
         assert sv["family"] == "gemm"
-        assert sv["isolated"] == list(v["isolated"])
+        assert sv["isolated"] == list(v["isolated"]) + [0]
         assert sv["speedup"] == v["speedup"]
-    # reload at v3: no warning, entries intact
+    # reload at v4: no warning, entries intact
     lib2 = GOLibrary(p)
     assert lib2.loaded_schema == SCHEMA_VERSION
     assert lib2.entries().keys() == lib.entries().keys()
 
 
+def test_v3_to_v4_migration_preserves_entries_bitwise(tmp_path):
+    """A v3 blob (4-element tiles + family field) migrates to v4
+    bitwise: tiles gain ``stream_k=0``, nothing else moves — v4 only
+    widened the Step-② candidate set with a strict tie-break, so v3
+    picks are exactly what the current tuner would keep on ties."""
+    entries = {
+        "8_128_16384_00_bf16": {
+            "family": "gemm",
+            "isolated": [8, 128, 512, 1],
+            "go": {"2": [8, 128, 128, 8], "16": [8, 512, 128, 2]},
+            "rc_source": {"2": "GPU", "16": "GPU/4"},
+            "speedup": {"2": 2.0625, "16": 3.1},
+        },
+        "att_4_32_8_1_4096_128_c_bf16": {
+            "family": "flash_attention",
+            "isolated": [128, 512, 128, 1],
+            "go": {"4": [8, 256, 128, 1]},
+            "rc_source": {"4": "GPU/2"},
+            "speedup": {"4": 1.25},
+        },
+    }
+    p = tmp_path / "golib.json"
+    p.write_text(json.dumps({"schema": 3, "entries": entries}))
+    with pytest.warns(UserWarning, match="migrating"):
+        lib = GOLibrary(p)
+    assert lib.loaded_schema == 3 and len(lib) == 2
+    for k, v in entries.items():
+        e = lib.entries()[k]
+        assert e.family == v["family"]
+        assert e.isolated == TileConfig(*v["isolated"])
+        assert e.isolated.stream_k == 0
+        assert e.go == {int(c): TileConfig(*t) for c, t in v["go"].items()}
+        assert e.speedup == {int(c): s for c, s in v["speedup"].items()}
+    lib.save()
+    saved = json.loads(p.read_text())
+    assert saved["schema"] == SCHEMA_VERSION
+    for k, v in entries.items():
+        sv = saved["entries"][k]
+        assert sv["isolated"] == v["isolated"] + [0]
+        assert sv["go"] == {c: t + [0] for c, t in v["go"].items()}
+        assert sv["speedup"] == v["speedup"]
+    lib2 = GOLibrary(p)          # reload at v4: no warning, intact
+    assert lib2.loaded_schema == SCHEMA_VERSION
+    assert lib2.entries().keys() == lib.entries().keys()
+
+
 def test_v1_blob_still_discarded(tmp_path):
-    """v1 semantics are unchanged by the v3 bump: pre-split-K entries
+    """v1 semantics are unchanged by the v4 bump: pre-split-K entries
     are stale and must be dropped, not migrated."""
     d = GemmDesc(256, 256, 256)
     p = tmp_path / "golib.json"
