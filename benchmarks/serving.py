@@ -31,14 +31,18 @@ modeled concurrent-vs-sequential speedup of that pool.
 job gates against the committed copy), and `results/serving_golib.json`
 on every run.  The GO library file records its schema version
 (`repro.core.library.SCHEMA_VERSION`); v1 files (pre-split-K search
-space) are discarded at load with a warning and re-tuned, while v2/v3
-files are **migrated** to v4 (DESIGN.md §14, §15) — their entries were
-tuned on search spaces v4 subsumes, so tiles are preserved bitwise
-(v2 additionally gains ``family="gemm"``; short tile lists default
-``stream_k=0``), and the save at the end of the run rewrites the file
-under the compact v4 envelope (5-element tiles
-``[bm, bn, bk, split_k, stream_k]``).  A stale library is never
-silently used to mis-plan.
+space) are discarded at load with a warning and re-tuned, while
+v2/v3/v4 files are **migrated** to v5 (DESIGN.md §14–§16) — their
+entries were tuned on search spaces v5 subsumes, so tiles are preserved
+bitwise (v2 additionally gains ``family="gemm"``; short tile lists
+default ``stream_k=0``; measured provenance defaults absent), and the
+save at the end of the run rewrites the file under the compact v5
+envelope (5-element tiles ``[bm, bn, bk, split_k, stream_k]``).  A
+stale library is never silently used to mis-plan.
+
+The report also carries a **measured** section (DESIGN.md §16): the GO
+picks of a small decode grid timed on the interpret backend next to
+their modeled times — only the finite-cell count is trend-gated.
 """
 from __future__ import annotations
 
@@ -226,6 +230,41 @@ def run_mixed_ops(lib: GOLibrary, steps: int = 60) -> Dict[str, object]:
     return out
 
 
+def run_measured(cells: int = 3) -> Dict[str, object]:
+    """Measured-vs-modeled columns (DESIGN.md §16): time the GO picks of
+    a small decode GEMM grid through `core.measure` on the interpret
+    backend, next to their modeled roofline times.  The microseconds are
+    report-only (interpret-mode CPU calibrates candidate *ordering*, not
+    absolute TPU latency — README "Measured vs modeled"); the trend gate
+    consumes only the finite-cell count."""
+    from repro.core.cost_model import group_time
+    from repro.core.measure import Measurer, smoke_grid
+    from repro.core.tuner import tune_gemm
+
+    measurer = Measurer(warmup=1, repeats=3)
+    grid: Dict[str, object] = {}
+    finite = total = 0
+    for d in smoke_grid(cells):
+        e = tune_gemm(d)
+        per = {}
+        for cd in (1, 2):
+            tile = e.tile_for_cd(cd)
+            modeled = (isolated_time(d, tile) if cd == 1
+                       else group_time([(d, tile)] * cd))
+            m = measurer.measure_group(d, tile, cd)
+            total += 1
+            finite += int(m.finite)
+            per[str(cd)] = {
+                "modeled_us": round(modeled * 1e6, 3),
+                "measured_us": round(m.time_s * 1e6, 1),
+                "samples": m.n,
+                "run_id": m.run_id,
+            }
+        grid[d.key()] = per
+    return {"backend": measurer.backend, "measured_cells": total,
+            "measured_finite_cells": finite, "grid": grid}
+
+
 def verify_execute() -> None:
     """End-to-end kernel check: one reduced-config decode flush through the
     real pallas kernels (interpret mode) vs the XLA reference."""
@@ -312,7 +351,14 @@ def main(argv=None) -> Dict[str, Dict[str, Dict[str, float]]]:
             f"{mixed['speedup_vs_sequential']:.3f} <= 1.05x")
         assert mixed["hit_rate_steady"] > 0.9
 
-    _write_bench_json(results, mixed, flags)
+    measured = run_measured()
+    print(f"# measured: {measured['measured_finite_cells']}/"
+          f"{measured['measured_cells']} cells finite on "
+          f"{measured['backend']}")
+    assert measured["measured_finite_cells"] == measured["measured_cells"], \
+        "measurement harness produced non-finite/zero timings"
+
+    _write_bench_json(results, mixed, measured, flags)
     lib.save()
 
     if not args.no_verify:
@@ -332,7 +378,7 @@ def main(argv=None) -> Dict[str, Dict[str, Dict[str, float]]]:
     return results
 
 
-def _write_bench_json(results, mixed, flags) -> None:
+def _write_bench_json(results, mixed, measured, flags) -> None:
     """`results/BENCH_serving.json`: the serving benchmark's count-based
     metric record.  ``trend_metrics`` is the generic contract consumed by
     `benchmarks/trend.py` (the CI bench-trend gate): each entry declares
@@ -374,10 +420,15 @@ def _write_bench_json(results, mixed, flags) -> None:
             "value": mixed["hit_rate_steady"], "better": "higher"}
         trend["mixed_mean_cd"] = {
             "value": mixed["mean_cd"], "better": "higher"}
+    # Measured-harness coverage (§16): count-based only — the measured
+    # microseconds live in the report but are never trend-gated.
+    trend["measured_cells"] = {
+        "value": measured["measured_finite_cells"], "better": "higher"}
     blob = {
         "flags": flags,
         "traces": results,
         "mixed_ops": mixed,
+        "measured": measured,
         "trend_metrics": trend,
     }
     out = RESULTS / "BENCH_serving.json"

@@ -22,6 +22,11 @@ Measures the two perf claims of the vectorized-tuner work (DESIGN.md §13):
    so Stream-K deselection fails CI instead of flattening perf quietly
    (DESIGN.md §15).
 
+4. **Measured columns** — interpret-backend measured times next to the
+   modeled ones for a small decode grid, plus the `tune_gemm(...,
+   measure=)` re-rank hook on one class (DESIGN.md §16).  Only the
+   finite-cell *count* is trend-gated; the microseconds are report-only.
+
 Wall-clock thresholds are asserted only in the full run; ``--smoke``
 (the CI perf gate) asserts the **count-based** thresholds below, which
 are deterministic and flake-free on shared runners.
@@ -44,7 +49,12 @@ import numpy as np  # noqa: E402
 
 from benchmarks.context import RESULTS  # noqa: E402
 from repro.core import ConcurrencyController, GemmDesc, GOLibrary  # noqa: E402
-from repro.core.cost_model import EVAL_COUNTER, group_time  # noqa: E402
+from repro.core.cost_model import (  # noqa: E402
+    EVAL_COUNTER,
+    group_time,
+    isolated_time,
+)
+from repro.core.measure import Measurer, smoke_grid  # noqa: E402
 from repro.core.predictor import generate_gemm_pool  # noqa: E402
 from repro.core.tuner import (  # noqa: E402
     CANDIDATE_TILES,
@@ -297,6 +307,55 @@ def bench_streamk() -> Dict[str, object]:
     }
 
 
+def bench_measure(cells: int = 3) -> Dict[str, object]:
+    """Measured-vs-modeled columns (DESIGN.md §16): time the GO picks of
+    a small decode grid through `core.measure` on the interpret backend,
+    next to their modeled roofline times, and run the `tune_gemm(...,
+    measure=)` re-rank hook on one class.  Wall-clock microseconds are
+    report-only (interpret-mode CPU calibrates *ordering*, not absolute
+    latency — README "Measured vs modeled"); the trend gate consumes
+    only the finite-cell count."""
+    measurer = Measurer(warmup=1, repeats=3)
+    rows: Dict[str, object] = {}
+    finite = total = 0
+    for d in smoke_grid(cells):
+        e = tune_gemm_batch([d])[0]
+        per = {}
+        for cd in (1, 2):
+            tile = e.tile_for_cd(cd)
+            modeled = (isolated_time(d, tile) if cd == 1
+                       else group_time([(d, tile)] * cd))
+            m = measurer.measure_group(d, tile, cd)
+            total += 1
+            finite += int(m.finite)
+            per[str(cd)] = {
+                "modeled_us": round(modeled * 1e6, 3),
+                "measured_us": round(m.time_s * 1e6, 1),
+                "samples": m.n,
+                "run_id": m.run_id,
+            }
+        rows[d.key()] = per
+    # Measured Step-② re-rank of one decode class via the tuner hook.
+    d = smoke_grid(1)[0]
+    base = tune_gemm_batch([d])[0]
+    ranked = measurer.rerank(d, base, cds=(2,))
+    return {
+        "backend": measurer.backend,
+        "measured_cells": total,
+        "measured_finite_cells": finite,
+        "rerank": {
+            "desc": d.key(),
+            "modeled_pick": base.go[2].key(),
+            "measured_pick": ranked.go[2].key(),
+            "picks_agree": ranked.go[2] == base.go[2],
+            "measured_us": {str(c): round(t * 1e6, 1)
+                            for c, t in sorted(ranked.measured.items())},
+            "run_id": ranked.measure_run_id,
+        },
+        "classes": rows,
+    }
+
+
 def main(argv=None) -> Dict[str, object]:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -314,6 +373,7 @@ def main(argv=None) -> Dict[str, object]:
     report["flush"] = bench_flush(rounds)
     report["split_k"] = bench_splitk()
     report["stream_k"] = bench_streamk()
+    report["measure"] = bench_measure()
     # Count-based trajectory record for the CI bench-trend gate
     # (`benchmarks/trend.py`): deterministic metrics only — wall-clock
     # numbers live in the report but are never trend-gated.
@@ -348,6 +408,11 @@ def main(argv=None) -> Dict[str, object]:
         "decomposition_counts": {
             "value": report["stream_k"]["decomposition_counts"]["stream_k"],
             "better": "higher"},
+        # Measured-harness coverage (§16): finite measured cells only —
+        # the wall-clock values themselves are never trend-gated.
+        "measured_finite_cells": {
+            "value": report["measure"]["measured_finite_cells"],
+            "better": "higher"},
     }
 
     RESULTS.mkdir(exist_ok=True)
@@ -375,6 +440,11 @@ def main(argv=None) -> Dict[str, object]:
           f"distinct kernels/class "
           f"{stk['mean_distinct_go_kernels']['stream']:.1f} vs "
           f"{stk['mean_distinct_go_kernels']['legacy']:.1f} legacy")
+    mea = report["measure"]
+    print(f"# measure: {mea['measured_finite_cells']}/"
+          f"{mea['measured_cells']} cells finite on {mea['backend']} | "
+          f"rerank pick {'kept' if mea['rerank']['picks_agree'] else 'moved'}"
+          f" ({mea['rerank']['measured_pick']})")
     print(f"# wrote {out_path}")
 
     # ---- count-based gates (always; deterministic, CI-safe)
@@ -395,6 +465,8 @@ def main(argv=None) -> Dict[str, object]:
     assert (stk["mean_distinct_go_kernels"]["stream"]
             <= stk["mean_distinct_go_kernels"]["legacy"]), \
         "Stream-K tables are WIDER than legacy across the CD axis"
+    assert mea["measured_finite_cells"] == mea["measured_cells"], \
+        "measurement harness produced non-finite/zero timings"
     # ---- wall-clock gates (full run only; excluded from CI smoke)
     if not args.smoke:
         assert tun["equal_space_speedup"] >= MIN_EQUAL_SPACE_SPEEDUP, \

@@ -3,6 +3,7 @@ concurrency control, adapted to TPU (see DESIGN.md)."""
 from repro.core.cost_model import (
     DEFAULT_SPEC,
     RC_FRACTIONS,
+    CostCalibrator,
     TPUSpec,
     group_time,
     isolated_time,
@@ -12,6 +13,11 @@ from repro.core.cost_model import (
 )
 from repro.core.gemm_desc import GemmDesc
 from repro.core.library import GOLibrary, default_library
+from repro.core.measure import (
+    Measurement,
+    Measurer,
+    backend_tag,
+)
 from repro.core.op_desc import (
     FAMILIES,
     AttentionDesc,
@@ -37,6 +43,7 @@ from repro.core.scheduler import (
     GroupPlan,
     Schedule,
     compat_key,
+    execute_schedule,
 )
 from repro.core.tuner import (
     CDS,
@@ -50,6 +57,8 @@ from repro.core.tuner import (
 __all__ = [
     "DEFAULT_SPEC", "RC_FRACTIONS", "TPUSpec", "group_time", "isolated_time",
     "kernel_stats", "sequential_time", "speedup_vs_sequential", "GemmDesc",
+    "CostCalibrator", "Measurement", "Measurer", "backend_tag",
+    "execute_schedule",
     "GOLibrary", "default_library", "FAMILIES", "AttentionDesc",
     "GroupedGemmDesc", "ScanDesc", "family_of", "op_from_key", "CLASSES",
     "Predictor", "accuracy_by_available", "gemm_features",

@@ -1059,3 +1059,121 @@ def _round_up(a, b):
 
 def _align_eff(dim, mxu):
     return dim / (_cdiv(dim, mxu) * mxu)
+
+
+# --------------------------------------------------- self-calibration (§16)
+@dataclass
+class ClassCalibration:
+    """Per-(family, compat-class) correction state.
+
+    ``log_factor`` is the EWMA of log(achieved/modeled) — the
+    multiplicative correction is ``exp(log_factor)``; ``drift`` is the
+    EWMA of |log(achieved/modeled)| against the *raw* model, the stale-
+    entry detector (a well-modeled class sits near 0, a biased one near
+    |log bias| regardless of sign)."""
+
+    log_factor: float = 0.0
+    drift: float = 0.0
+    n: int = 0
+
+
+class CostCalibrator:
+    """Online multiplicative correction of the roofline model (DESIGN.md
+    §16): fit per-(family, compat-class) factors from the modeled-vs-
+    achieved ratios the runtime telemetry collects, so CD selection can
+    rank groups by ``factor · modeled_time`` instead of trusting the
+    first-principles constants.
+
+    Updates are EWMAs in log space (the first sample initializes the
+    state directly, so a constant-bias stream converges immediately and
+    stays put).  Working in ratios makes every statistic scale-invariant:
+    multiplying modeled AND achieved times by any constant leaves the
+    factors unchanged, and applying one class's factor to all of that
+    class's candidates can never flip a modeled ordering (property-tested
+    in `tests/test_calibration.py`).
+
+    ``pop_stale()`` is the drift detector: classes whose ``drift`` EWMA
+    exceeds ``drift_threshold`` (in |log ratio| units — 0.35 ≈ a 1.4×
+    modeled-vs-achieved gap) are returned once and their drift state
+    reset, so the caller can queue ONE background re-tune per excursion
+    (`Runtime.process_retunes`) instead of re-tuning every flush."""
+
+    def __init__(self, alpha: float = 0.2, drift_threshold: float = 0.35):
+        self.alpha = float(alpha)
+        self.drift_threshold = float(drift_threshold)
+        self._state: dict[tuple[str, str], ClassCalibration] = {}
+
+    # ------------------------------------------------------------- update
+    def update(
+        self, family: str, class_key: str, modeled_s: float, achieved_s: float
+    ) -> None:
+        """Fold one modeled-vs-achieved observation into the class state.
+        Non-positive times carry no ratio information and are ignored."""
+        if modeled_s <= 0 or achieved_s <= 0:
+            return
+        r = math.log(achieved_s / modeled_s)
+        st = self._state.get((family, class_key))
+        if st is None or st.n == 0:
+            self._state[(family, class_key)] = ClassCalibration(
+                log_factor=r, drift=abs(r), n=1)
+            return
+        a = self.alpha
+        st.log_factor = (1.0 - a) * st.log_factor + a * r
+        st.drift = (1.0 - a) * st.drift + a * abs(r)
+        st.n += 1
+
+    # -------------------------------------------------------------- query
+    def factor(self, family: str, class_key: str) -> float:
+        """Multiplicative correction for a class; 1.0 until observed."""
+        st = self._state.get((family, class_key))
+        return 1.0 if st is None or st.n == 0 else math.exp(st.log_factor)
+
+    def correct(
+        self, family: str, class_key: str, modeled_s: float
+    ) -> float:
+        """``factor · modeled`` — returns ``modeled_s`` untouched (same
+        float object, bitwise) for classes with no observations."""
+        st = self._state.get((family, class_key))
+        if st is None or st.n == 0:
+            return modeled_s
+        return modeled_s * math.exp(st.log_factor)
+
+    def __len__(self) -> int:
+        return len(self._state)
+
+    def stale_classes(self) -> list[tuple[str, str]]:
+        """Classes whose drift EWMA currently exceeds the threshold."""
+        return [k for k, st in sorted(self._state.items())
+                if st.drift > self.drift_threshold]
+
+    def pop_stale(self) -> list[tuple[str, str]]:
+        """`stale_classes`, resetting each returned class's drift state so
+        one bias excursion queues one re-tune (the factor survives — the
+        correction stays live while the re-tune is pending)."""
+        stale = self.stale_classes()
+        for k in stale:
+            self._state[k].drift = 0.0
+        return stale
+
+    # ------------------------------------------------------------ persist
+    def to_json(self) -> dict:
+        return {
+            "alpha": self.alpha,
+            "drift_threshold": self.drift_threshold,
+            "classes": {
+                f"{fam}|{ck}": {"log_factor": st.log_factor,
+                                "drift": st.drift, "n": st.n}
+                for (fam, ck), st in sorted(self._state.items())
+            },
+        }
+
+    @classmethod
+    def from_json(cls, blob: dict) -> "CostCalibrator":
+        cal = cls(alpha=blob.get("alpha", 0.2),
+                  drift_threshold=blob.get("drift_threshold", 0.35))
+        for key, st in blob.get("classes", {}).items():
+            fam, ck = key.split("|", 1)
+            cal._state[(fam, ck)] = ClassCalibration(
+                log_factor=float(st["log_factor"]),
+                drift=float(st["drift"]), n=int(st["n"]))
+        return cal

@@ -14,17 +14,23 @@ per-entry ``family`` field for the heterogeneous kernel zoo; v4
 lists ``[bm, bn, bk, split_k, stream_k]``) and switches `save` to
 compact JSON (no indent, tight separators — committed libraries carry
 hundreds of entries and the pretty form was ~2× the bytes for a blob
-only machines read).  Loading is backward compatible with
-version-appropriate trust:
+only machines read); v5 (DESIGN.md §16) adds *optional* measured-time
+provenance per entry (``measured`` CD→seconds map + backend tag, sample
+count, timestamp-free run id from `core/measure.py`) — modeled-only
+entries serialize exactly as at v4, and the planner never consults the
+measured fields, so a v5 blob read by modeled-only logic plans
+identically.  Loading is backward compatible with version-appropriate
+trust:
 
 - a bare v1 blob parses, but its entries were tuned on a pre-split-K
   search space — stale, so they are **discarded** with a warning and
   re-tuned lazily;
-- v2/v3 blobs' entries were tuned on the *same GEMM search space* v4
-  widens (Stream-K adds candidates without perturbing the old ones, and
-  the argmin tie-break is strict), so they are **preserved bitwise** —
-  short tile lists default ``stream_k=0`` (and v2 the family
-  ``"gemm"``); a migration warning notes the rewrite that the next
+- v2/v3/v4 blobs' entries were tuned on the *same GEMM search space*
+  later versions widen (Stream-K adds candidates without perturbing the
+  old ones, the argmin tie-break is strict, and v5 adds no candidates
+  at all), so they are **preserved bitwise** — short tile lists default
+  ``stream_k=0`` (and v2 the family ``"gemm"``); measured fields
+  default empty; a migration warning notes the rewrite that the next
   `save` performs.
 """
 from __future__ import annotations
@@ -44,9 +50,9 @@ from repro.kernels.gemm.ops import TileConfig
 
 # Bump whenever the persisted format OR the tuning search space changes in
 # a way that invalidates stored entries (v2: split-K axis + bm 8-32 rows;
-# v3: per-entry kernel family; v4: Stream-K axis + compact JSON — v2/v3
-# entries stay valid).
-SCHEMA_VERSION = 4
+# v3: per-entry kernel family; v4: Stream-K axis + compact JSON; v5:
+# optional measured-time provenance — v2/v3/v4 entries stay valid).
+SCHEMA_VERSION = 5
 
 
 def _tile_to_list(t: TileConfig) -> list[int]:
@@ -121,6 +127,18 @@ class GOLibrary:
             self.save()
         return fresh
 
+    def invalidate(self, keys: Sequence[str]) -> int:
+        """Drop entries by desc key so the next `get`/`prewarm` re-tunes
+        them — the drift re-tune path (DESIGN.md §16): the runtime queues
+        stale classes' descs, invalidates, and prewarms off the dispatch
+        path.  Returns the number of entries actually dropped."""
+        n = 0
+        with self._lock:
+            for k in keys:
+                if self._entries.pop(k, None) is not None:
+                    n += 1
+        return n
+
     def __len__(self) -> int:
         return len(self._entries)
 
@@ -130,18 +148,29 @@ class GOLibrary:
     # ----------------------------------------------------------- persist
     def save(self, path: str | os.PathLike | None = None) -> None:
         path = Path(path or self.path)
+
+        def _rec(e: GOEntry) -> dict:
+            rec = {
+                "family": e.family,
+                "isolated": _tile_to_list(e.isolated),
+                "go": {str(cd): _tile_to_list(t) for cd, t in e.go.items()},
+                "rc_source": e.rc_source,
+                "speedup": {str(cd): s for cd, s in e.speedup.items()},
+            }
+            # v5 measured provenance is *optional*: modeled-only entries
+            # keep the exact v4 record shape (byte-stable libraries).
+            if e.measured:
+                rec["measured"] = {str(cd): t for cd, t in e.measured.items()}
+                rec["measure"] = {
+                    "backend": e.measure_backend,
+                    "samples": e.measure_samples,
+                    "run_id": e.measure_run_id,
+                }
+            return rec
+
         blob = {
             "schema": SCHEMA_VERSION,
-            "entries": {
-                k: {
-                    "family": e.family,
-                    "isolated": _tile_to_list(e.isolated),
-                    "go": {str(cd): _tile_to_list(t) for cd, t in e.go.items()},
-                    "rc_source": e.rc_source,
-                    "speedup": {str(cd): s for cd, s in e.speedup.items()},
-                }
-                for k, e in self._entries.items()
-            },
+            "entries": {k: _rec(e) for k, e in self._entries.items()},
         }
         tmp = path.with_suffix(".tmp")
         # Compact serialization (satellite of DESIGN.md §15): committed
@@ -151,16 +180,17 @@ class GOLibrary:
         tmp.replace(path)
 
     def load(self, path: str | os.PathLike) -> int:
-        """Parse a v1–v4 blob; returns the file's schema version.
+        """Parse a v1–v5 blob; returns the file's schema version.
 
         v1 entries are *discarded* (tuned on the pre-split-K search space
         — they would mis-plan, DESIGN.md §13) and re-tuned lazily.
-        v2/v3 entries are *preserved bitwise* — short tile lists default
-        ``stream_k=0`` (and v2 the family ``"gemm"``); v4 only widened
-        the Step-② candidate set with a strict tie-break, so old picks
-        remain exactly what the current tuner would keep (DESIGN.md
-        §15) — a migration warning notes that the next `save` rewrites
-        the file at v4."""
+        v2/v3/v4 entries are *preserved bitwise* — short tile lists
+        default ``stream_k=0`` (and v2 the family ``"gemm"``); v4 only
+        widened the Step-② candidate set with a strict tie-break, and v5
+        only *annotates* entries with optional measured provenance
+        (DESIGN.md §15/§16), so old picks remain exactly what the
+        current tuner would keep — a migration warning notes that the
+        next `save` rewrites the file at v5."""
         blob = json.loads(Path(path).read_text())
         if isinstance(blob, dict) and "schema" in blob:
             schema, entries = int(blob["schema"]), blob["entries"]
@@ -184,6 +214,7 @@ class GOLibrary:
                 stacklevel=2,
             )
         for k, v in entries.items():
+            meta = v.get("measure", {})
             self._entries[k] = GOEntry(
                 desc_key=k,
                 isolated=_tile_from_list(v["isolated"]),
@@ -191,6 +222,11 @@ class GOLibrary:
                 rc_source={int(c): s for c, s in v.get("rc_source", {}).items()},
                 speedup={int(c): s for c, s in v.get("speedup", {}).items()},
                 family=v.get("family", "gemm"),
+                measured={int(c): float(t)
+                          for c, t in v.get("measured", {}).items()},
+                measure_backend=meta.get("backend"),
+                measure_samples=int(meta.get("samples", 0)),
+                measure_run_id=meta.get("run_id"),
             )
         return schema
 

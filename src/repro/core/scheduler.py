@@ -27,6 +27,7 @@ while `execute()` is plan + execute in one call.
 from __future__ import annotations
 
 import functools
+import math
 from dataclasses import dataclass, field, replace
 from typing import List, Optional, Sequence
 
@@ -36,6 +37,7 @@ import numpy as np
 
 from repro.core.cost_model import (
     DEFAULT_SPEC,
+    CostCalibrator,
     TPUSpec,
     group_time,
     isolated_time,
@@ -133,6 +135,7 @@ class ConcurrencyController:
         spec: TPUSpec = DEFAULT_SPEC,
         max_cd: int = 16,
         go_tiles: bool = True,
+        calibrator: CostCalibrator | None = None,
     ):
         # NB: `library or default_library()` would discard an *empty*
         # GOLibrary (its __len__ makes it falsy) — compare to None.
@@ -143,6 +146,13 @@ class ConcurrencyController:
         # go_tiles=False plans grouped launches with the isolated-tuned tile
         # (the paper's "default" baseline; used by benchmark baselines).
         self.go_tiles = go_tiles
+        # Optional self-calibration (DESIGN.md §16): modeled times are
+        # multiplied by per-(family, compat-class) correction factors at
+        # *selection* time only — plans keep the raw modeled time, so the
+        # telemetry ratio that feeds the calibrator stays raw and the
+        # loop is an EWMA, not an integrator.  ``None`` disables every
+        # correction path bitwise (guarded by tests/test_calibration.py).
+        self.calibrator = calibrator
         # Dispatch-path memos (DESIGN.md §10): CD decisions and feature
         # vectors per desc key.  MUST be invalidated when `lib`/`spec` are
         # swapped (Runtime.set_mesh does) — stale CDs would mis-plan.
@@ -182,6 +192,40 @@ class ConcurrencyController:
             cd = min(self.lib.get(desc).preferred_cd(), floor)
         self._cd_cache[ck] = cd
         return cd
+
+    # -------------------------------------------------------- calibration
+    def _group_factor(self, descs) -> float:
+        """FLOPs-weighted geometric mean of the members' per-(family,
+        compat-class) correction factors — the multiplier calibrated
+        selection applies to a candidate group's modeled time.  A
+        homogeneous group reduces to its class factor; 1.0 with no
+        calibrator or no observations.  Within one class the factor is a
+        common scale, so `preferred_cd`'s ordering is invariant — only
+        cross-class comparisons (`plan_mixed` chunking, §6.11 fuse vs
+        group) can change under correction."""
+        cal = self.calibrator
+        if cal is None:
+            return 1.0
+        num = den = 0.0
+        for d in descs:
+            f = cal.factor(family_of(d), compat_key(d))
+            w = float(d.flops)
+            if f != 1.0:
+                num += w * math.log(f)
+            den += w
+        if num == 0.0 or den == 0.0:
+            return 1.0
+        return math.exp(num / den)
+
+    def _corrected_schedule_time(self, sched: "Schedule", descs) -> float:
+        """Calibrated total time of a schedule (selection metric only —
+        stored plans keep raw modeled times)."""
+        if self.calibrator is None:
+            return sched.modeled_time_s
+        return sum(
+            g.modeled_time_s * self._group_factor(
+                [descs[i] for i in g.indices])
+            for g in sched.groups)
 
     # --------------------------------------------------------------- plan
     def plan_group(
@@ -308,8 +352,18 @@ class ConcurrencyController:
 
         sizes = sorted({c for c in CLASSES if c <= min(n, cap)} | {1}
                        | ({min(n, cap)} if min(n, cap) > 1 else set()))
-        best = min((chunk_groups(s) for s in sizes),
-                   key=lambda gs: sum(g.modeled_time_s for g in gs))
+        if self.calibrator is None:
+            def chunk_time(gs: List[GroupPlan]) -> float:
+                return sum(g.modeled_time_s for g in gs)
+        else:
+            # Calibrated selection (§16): rank chunkings by corrected
+            # time; the winning plan still carries raw modeled times.
+            def chunk_time(gs: List[GroupPlan]) -> float:
+                return sum(
+                    g.modeled_time_s * self._group_factor(
+                        [descs[i] for i in g.indices])
+                    for g in gs)
+        best = min((chunk_groups(s) for s in sizes), key=chunk_time)
         sched.groups = best
         return sched
 
@@ -319,13 +373,24 @@ class ConcurrencyController:
     ) -> tuple[str, float, float]:
         """§6.11 QKV policy: GEMMs sharing A and K — fuse vs group.
 
-        Returns (choice, fused_time, grouped_time)."""
+        Returns (choice, fused_time, grouped_time) — the times are the
+        raw modeled numbers; with a calibrator attached the *choice* is
+        made on the corrected pair (the fused GEMM usually lives in a
+        different compat class than the grouped members, so §16
+        corrections can legitimately flip it)."""
         head = descs[0]
         fused_desc = replace(head, N=sum(d.N for d in descs))
         fused_tile = self.lib.get(fused_desc).isolated
         t_fused = isolated_time(fused_desc, fused_tile, self.spec)
-        t_group = self.plan(descs).modeled_time_s
-        return ("fuse" if t_fused <= t_group else "group", t_fused, t_group)
+        sched = self.plan(descs)
+        t_group = sched.modeled_time_s
+        if self.calibrator is None:
+            choice = "fuse" if t_fused <= t_group else "group"
+        else:
+            fused_c = t_fused * self._group_factor([fused_desc])
+            group_c = self._corrected_schedule_time(sched, descs)
+            choice = "fuse" if fused_c <= group_c else "group"
+        return (choice, t_fused, t_group)
 
     # ------------------------------------------------------------ execute
     def execute(
@@ -345,53 +410,66 @@ class ConcurrencyController:
 
         Separated from `execute()` so the serving runtime can replay a
         plan-cache hit without paying the planning pass again."""
-        outs: List[Optional[jax.Array]] = [None] * len(requests)
-        for gp in sched.groups:
-            reqs = [requests[i] for i in gp.indices]
-            if gp.mode == "mixed":
-                # Heterogeneous concurrent group: members are distinct
-                # kernels; execute each through its family op at the
-                # group's per-member GO tile (§14).  On real hardware
-                # these dispatch concurrently; here correctness rides the
-                # sequential member loop while latency is modeled.
-                tiles = gp.tiles or [gp.tile] * len(gp.indices)
-                for tile, i in zip(tiles, gp.indices):
-                    outs[i] = _run_op(requests[i], tile, interpret)
-            elif gp.mode == "single" and family_of(reqs[0].desc) != "gemm":
-                outs[gp.indices[0]] = _run_op(reqs[0], gp.tile, interpret)
-            elif gp.mode == "single" or len(reqs) == 1:
-                r = reqs[0]
-                outs[gp.indices[0]] = gemm(
-                    r.a, r.b, ta=r.desc.ta, tb=r.desc.tb, tile=gp.tile,
-                    interpret=interpret,
-                )
-            elif gp.mode == "grouped":
-                a = jnp.stack([_as_mk(r) for r in reqs])
-                b = jnp.stack([_as_kn(r) for r in reqs])
-                res = grouped_gemm(a, b, tile=gp.tile, interpret=interpret)
-                for j, i in enumerate(gp.indices):
-                    outs[i] = res[j]
-            else:  # ragged
-                bm = gp.tile.bm
-                rows, sizes = [], []
-                for r in reqs:
-                    m = _as_mk(r)
-                    pad = (-m.shape[0]) % bm
-                    if pad:
-                        m = jnp.pad(m, ((0, pad), (0, 0)))
-                    rows.append(m)
-                    sizes.append(m.shape[0])
-                a = jnp.concatenate(rows)
-                b = jnp.stack([_as_kn(r) for r in reqs])
-                res = ragged_gemm(
-                    a, b, jnp.asarray(sizes, jnp.int32), tile=gp.tile,
-                    interpret=interpret,
-                )
-                off = 0
-                for j, i in enumerate(gp.indices):
-                    outs[i] = res[off : off + requests[i].desc.M]
-                    off += sizes[j]
-        return outs  # type: ignore[return-value]
+        return execute_schedule(requests, sched, interpret=interpret)
+
+
+def execute_schedule(
+    requests: Sequence[GemmRequest],
+    sched: Schedule,
+    interpret: bool | None = None,
+) -> List[jax.Array]:
+    """Run a `Schedule` through the real kernels — the controller-free
+    execution core behind `ConcurrencyController.execute_plan`.  Module-
+    level so the measurement harness (`core/measure.py`, DESIGN.md §16)
+    times launches through the *same* family adapters and launch shapes
+    the scheduler dispatches."""
+    outs: List[Optional[jax.Array]] = [None] * len(requests)
+    for gp in sched.groups:
+        reqs = [requests[i] for i in gp.indices]
+        if gp.mode == "mixed":
+            # Heterogeneous concurrent group: members are distinct
+            # kernels; execute each through its family op at the
+            # group's per-member GO tile (§14).  On real hardware
+            # these dispatch concurrently; here correctness rides the
+            # sequential member loop while latency is modeled.
+            tiles = gp.tiles or [gp.tile] * len(gp.indices)
+            for tile, i in zip(tiles, gp.indices):
+                outs[i] = _run_op(requests[i], tile, interpret)
+        elif gp.mode == "single" and family_of(reqs[0].desc) != "gemm":
+            outs[gp.indices[0]] = _run_op(reqs[0], gp.tile, interpret)
+        elif gp.mode == "single" or len(reqs) == 1:
+            r = reqs[0]
+            outs[gp.indices[0]] = gemm(
+                r.a, r.b, ta=r.desc.ta, tb=r.desc.tb, tile=gp.tile,
+                interpret=interpret,
+            )
+        elif gp.mode == "grouped":
+            a = jnp.stack([_as_mk(r) for r in reqs])
+            b = jnp.stack([_as_kn(r) for r in reqs])
+            res = grouped_gemm(a, b, tile=gp.tile, interpret=interpret)
+            for j, i in enumerate(gp.indices):
+                outs[i] = res[j]
+        else:  # ragged
+            bm = gp.tile.bm
+            rows, sizes = [], []
+            for r in reqs:
+                m = _as_mk(r)
+                pad = (-m.shape[0]) % bm
+                if pad:
+                    m = jnp.pad(m, ((0, pad), (0, 0)))
+                rows.append(m)
+                sizes.append(m.shape[0])
+            a = jnp.concatenate(rows)
+            b = jnp.stack([_as_kn(r) for r in reqs])
+            res = ragged_gemm(
+                a, b, jnp.asarray(sizes, jnp.int32), tile=gp.tile,
+                interpret=interpret,
+            )
+            off = 0
+            for j, i in enumerate(gp.indices):
+                outs[i] = res[off : off + requests[i].desc.M]
+                off += sizes[j]
+    return outs  # type: ignore[return-value]
 
 
 def _as_mk(r: GemmRequest) -> jax.Array:

@@ -34,7 +34,7 @@ work decompositions (Step ② / GO-time axes):
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from typing import Dict, Sequence
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
@@ -156,6 +156,14 @@ class GOEntry:
     rc_source: Dict[int, str] = field(default_factory=dict)  # CD -> RC name
     speedup: Dict[int, float] = field(default_factory=dict)  # CD -> modeled
     family: str = "gemm"    # kernel family (OpDesc protocol, §14)
+    # Measured provenance (schema v5, DESIGN.md §16) — empty for
+    # modeled-only entries, and never consulted by the planner: modeled
+    # speedups drive CD selection, so a measured entry plans identically
+    # to its modeled twin (regression-tested in tests/test_mixed_ops.py).
+    measured: Dict[int, float] = field(default_factory=dict)  # CD -> seconds
+    measure_backend: Optional[str] = None
+    measure_samples: int = 0
+    measure_run_id: Optional[str] = None
 
     def tile_for_cd(self, cd: int) -> TileConfig:
         """GO tile for the largest tuned CD ≤ ``cd``; a ``cd`` below the
@@ -380,18 +388,26 @@ def tune_gemm(
     tiles: Sequence[TileConfig] | None = None,
     split_ks: Sequence[int] | None = None,
     stream_k: bool = True,
+    measure=None,
 ) -> GOEntry:
     """Vectorized Step ① + Step ② for one GEMM.  ``tiles``/``split_ks``/
     ``stream_k`` override the search space (benchmarks replay the legacy
-    space)."""
-    return tune_gemm_batch([desc], spec, cds, tiles, split_ks,
-                           stream_k=stream_k)[0]
+    space).  ``measure`` (a `core.measure.Measurer`, duck-typed) adds
+    the optional measured pass: Step-② candidates are re-ranked by
+    measured grouped-launch time and the entry gains ``measured``
+    provenance (DESIGN.md §16)."""
+    entry = tune_gemm_batch([desc], spec, cds, tiles, split_ks,
+                            stream_k=stream_k)[0]
+    if measure is not None:
+        entry = measure.rerank(desc, entry, cds=cds)
+    return entry
 
 
 def tune_op(
     desc,
     spec: TPUSpec = DEFAULT_SPEC,
     cds: Sequence[int] = CDS,
+    measure=None,
 ) -> GOEntry:
     """RC tuning for *any* kernel family (§14): the same two-step GOLDYLOC
     pipeline — Step ① best tile per RC fraction on the family's tile axes,
@@ -400,7 +416,7 @@ def tune_op(
     GEMMs keep their fully-batched path (split-K axis included)."""
     fam = family_of(desc)
     if fam == "gemm":
-        return tune_gemm(desc, spec, cds)
+        return tune_gemm(desc, spec, cds, measure=measure)
     search = TileBatch.from_tiles(FAMILY_TILES[fam])
     ws_raw = np.asarray(op_tile_ws(desc, search, spec))
     winners: Dict[str, TileConfig] = {}
@@ -426,6 +442,8 @@ def tune_op(
         entry.go[cd] = best_tile
         entry.rc_source[cd] = best_name
         entry.speedup[cd] = (seq_1 * cd) / best_t
+    if measure is not None:
+        entry = measure.rerank(desc, entry, cds=cds)
     return entry
 
 

@@ -162,6 +162,12 @@ class Runtime:
         self._plan_cache: "OrderedDict[Signature, Schedule]" = OrderedDict()
         self._seq = 0
         self._flush_id = 0
+        # Calibration plumbing (DESIGN.md §16): representative descs per
+        # compatibility class (so a drift-flagged class key can be turned
+        # back into tunable descriptors) and the queued re-tunes that
+        # `process_retunes` runs off the dispatch path.
+        self._class_descs: Dict[str, Dict[str, GemmDesc]] = {}
+        self._retune: List[Tuple[str, str]] = []
 
     # ------------------------------------------------------------- admit
     def submit(
@@ -380,7 +386,9 @@ class Runtime:
                 achieved_time_s=achieved,
                 cache_hit=launch.cache_hit,
             ))
+            self._feed_calibration(launch, achieved)
         self.device_free_t = t
+        self._queue_stale_retunes()
         self.telemetry.record_flush_fastpath(
             EVAL_COUNTER.evals - evals0,
             self.telemetry.sig_resorts - resorts0,
@@ -393,6 +401,63 @@ class Runtime:
         while self.pending():
             out += self.flush(now=now, force=True)
         return out
+
+    # -------------------------------------------------- calibration (§16)
+    def _feed_calibration(self, launch: Launch, achieved: Optional[float]):
+        """Fold one executed launch's modeled-vs-achieved ratio into the
+        controller's `CostCalibrator` — homogeneous class launches only
+        (a mixed group's wall clock cannot be attributed to one class;
+        its members' classes learn from their own per-class launches).
+        Pure arithmetic: no cost-model evals, so the zero-eval flush
+        fast-path gate is untouched."""
+        cal = self.ctrl.calibrator
+        if cal is None or launch.class_key == MIXED_CLASS:
+            return
+        descs = self._class_descs.setdefault(launch.class_key, {})
+        for tk in launch.tickets:
+            if len(descs) >= 4 and tk.desc.key() not in descs:
+                continue
+            descs[tk.desc.key()] = tk.desc
+        if achieved is None:
+            return
+        cal.update(family_of(launch.tickets[0].desc), launch.class_key,
+                   launch.plan.modeled_time_s, achieved)
+
+    def _queue_stale_retunes(self) -> None:
+        """Drift detection → re-tune queue: classes whose |log ratio|
+        EWMA crossed the calibrator's threshold are queued ONCE per
+        excursion (`pop_stale` resets the drift state) for
+        `process_retunes` to handle off the dispatch path."""
+        cal = self.ctrl.calibrator
+        if cal is None:
+            return
+        for fam_ck in cal.pop_stale():
+            if fam_ck not in self._retune:
+                self._retune.append(fam_ck)
+
+    def pending_retunes(self) -> int:
+        return len(self._retune)
+
+    def process_retunes(self) -> int:
+        """Run the queued drift re-tunes (the "background" half of §16 —
+        callers invoke this between traffic, never inside flush):
+        invalidate the stale classes' library entries, re-tune them in
+        one `GOLibrary.prewarm` sweep, and drop every plan/memo derived
+        from the stale entries.  Returns the number of re-tuned
+        entries."""
+        if not self._retune:
+            return 0
+        descs: Dict[str, GemmDesc] = {}
+        for _, ck in self._retune:
+            descs.update(self._class_descs.get(ck, {}))
+        self._retune.clear()
+        if not descs:
+            return 0
+        self.ctrl.lib.invalidate(list(descs))
+        fresh = self.ctrl.lib.prewarm(list(descs.values()))
+        self.ctrl.invalidate_caches()
+        self.invalidate_plans()
+        return fresh
 
     # ---------------------------------------------------------- internals
     def _plan_for_keys(

@@ -11,6 +11,7 @@ path without touching the device.
 """
 from __future__ import annotations
 
+import math
 from collections import Counter
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -139,6 +140,36 @@ class Telemetry:
     def modeled_busy_time_s(self) -> float:
         return sum(g.modeled_time_s for g in self.groups)
 
+    def class_ratios(self) -> Dict[str, Dict[str, float]]:
+        """Per-class modeled-vs-achieved aggregates — the calibration
+        input (DESIGN.md §16).  `GroupRecord.model_error` used to be
+        computed and dropped; here every executed group's ratio is
+        folded into its compatibility class:
+
+        - ``n``: executed groups with a usable ratio;
+        - ``geomean_ratio``: exp(mean log ratio) — >1 ⇒ the model is
+          optimistic for this class (the multiplicative bias a
+          `CostCalibrator` fits);
+        - ``mean_abs_log``: mean |log ratio| — the drift statistic.
+        """
+        acc: Dict[str, List[float]] = {}
+        for g in self.groups:
+            r = g.model_error
+            if r is not None and r > 0:
+                acc.setdefault(g.class_key, []).append(math.log(r))
+        return {
+            k: {
+                "n": len(logs),
+                "geomean_ratio": round(math.exp(sum(logs) / len(logs)), 4),
+                "mean_abs_log": round(sum(abs(x) for x in logs) / len(logs), 4),
+            }
+            for k, logs in sorted(acc.items())
+        }
+
+    def snapshot(self) -> Dict[str, object]:
+        """Alias of `summary()`."""
+        return self.summary()
+
     def summary(self) -> Dict[str, object]:
         return {
             "submitted": self.submitted,
@@ -157,6 +188,7 @@ class Telemetry:
             "cp_overhead_saved_us": round(self.cp_overhead_saved_s * 1e6, 2),
             "modeled_busy_time_us": round(self.modeled_busy_time_s() * 1e6, 2),
             "queue_depths": self.queue_depth_histogram(),
+            "class_ratios": self.class_ratios(),
         }
 
 

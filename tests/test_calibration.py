@@ -1,0 +1,285 @@
+"""Self-calibrating cost model — DESIGN.md §16.
+
+The calibrator's contract has two halves, both property-tested here:
+the *statistics* (scale-invariant factors, immediate convergence under
+constant bias, ordering preserved when every class is biased equally,
+drift firing iff the bias exceeds the threshold, state surviving
+persistence) and the *wiring* (corrections applied at selection time
+only, ``calibrator=None`` and an empty calibrator bitwise identical to
+the pre-§16 planner, online-calibrated CD choice matching a
+bias-corrected oracle, the runtime's drift → re-tune loop)."""
+import json
+import math
+
+import pytest
+
+from tests.hypothesis_compat import given, settings, st
+
+from repro.core import (
+    ConcurrencyController,
+    CostCalibrator,
+    GemmDesc,
+    GemmRequest,
+    GOLibrary,
+    compat_key,
+)
+from repro.core.op_desc import AttentionDesc, ScanDesc, family_of
+from repro.runtime import Runtime, RuntimeConfig
+
+GEMM = GemmDesc(64, 2048, 2048)
+SCAN = ScanDesc(8, 1, 8, 64, 32)
+ATTN = AttentionDesc(8, 8, 2, 1, 512, 64)
+
+
+# ----------------------------------------------------- statistics (pure)
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(0.25, 4.0), min_size=1, max_size=8),
+       st.floats(1e-6, 1e3))
+def test_factor_is_scale_invariant(ratios, scale):
+    # Multiplying modeled AND achieved by any constant (a unit change, a
+    # faster chip) must leave the fitted factor unchanged.
+    a, b = CostCalibrator(), CostCalibrator()
+    for i, r in enumerate(ratios):
+        t = 1e-5 * (i + 1)
+        a.update("gemm", "c", t, r * t)
+        b.update("gemm", "c", scale * t, scale * (r * t))
+    assert math.isclose(a.factor("gemm", "c"), b.factor("gemm", "c"),
+                        rel_tol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.2, 5.0), st.integers(1, 40))
+def test_constant_bias_converges_immediately_and_stays(bias, n):
+    # First sample initializes the EWMA directly, so a constant-bias
+    # stream is recovered exactly from sample one onward.
+    cal = CostCalibrator()
+    for _ in range(n):
+        cal.update("gemm", "c", 1.0, bias)
+    assert math.isclose(cal.factor("gemm", "c"), bias, rel_tol=1e-9)
+    assert math.isclose(cal.correct("gemm", "c", 2.0), 2.0 * bias,
+                        rel_tol=1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(1e-6, 1.0), min_size=2, max_size=6),
+       st.floats(0.25, 4.0))
+def test_equal_ratios_never_flip_a_modeled_ordering(times, ratio):
+    # When every class carries the same observed ratio the correction is
+    # a common positive scale — no pair of modeled times may swap.
+    cal = CostCalibrator()
+    classes = [f"c{i}" for i in range(len(times))]
+    for ck in classes:
+        cal.update("gemm", ck, 1.0, ratio)
+    corrected = [cal.correct("gemm", ck, t)
+                 for ck, t in zip(classes, times)]
+    for i in range(len(times)):
+        for j in range(len(times)):
+            if times[i] < times[j]:
+                assert corrected[i] <= corrected[j]
+
+
+def test_unobserved_class_is_bitwise_untouched():
+    cal = CostCalibrator()
+    cal.update("gemm", "seen", 1.0, 2.0)
+    t = 3.7e-5
+    assert cal.correct("gemm", "unseen", t) is t
+    assert cal.factor("gemm", "unseen") == 1.0
+    # Non-positive observations carry no ratio information.
+    cal.update("gemm", "unseen", 0.0, 1.0)
+    cal.update("gemm", "unseen", 1.0, -2.0)
+    assert cal.correct("gemm", "unseen", t) is t
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(0.2, 5.0))
+def test_drift_fires_iff_bias_exceeds_threshold(bias):
+    # One sample sets drift to exactly |log bias| (the init path), so
+    # the iff is exact — no EWMA rounding at the threshold boundary.
+    cal = CostCalibrator()
+    cal.update("gemm", "c", 1.0, bias)
+    fired = cal.stale_classes() == [("gemm", "c")]
+    assert fired == (abs(math.log(bias)) > cal.drift_threshold)
+
+
+def test_pop_stale_queues_one_retune_per_excursion():
+    cal = CostCalibrator()
+    cal.update("gemm", "c", 1.0, 3.0)          # |log 3| ≈ 1.10 > 0.35
+    assert cal.pop_stale() == [("gemm", "c")]
+    assert cal.pop_stale() == []               # drift reset, factor kept
+    assert math.isclose(cal.factor("gemm", "c"), 3.0, rel_tol=1e-9)
+    # The next biased sample re-accumulates from zero: one more update
+    # at the same bias stays under threshold (0.2 · 1.10 ≈ 0.22).
+    cal.update("gemm", "c", 1.0, 3.0)
+    assert cal.stale_classes() == []
+
+
+def test_state_survives_save_load_roundtrip():
+    cal = CostCalibrator(alpha=0.3, drift_threshold=0.5)
+    cal.update("gemm", "a", 1.0, 2.0)
+    cal.update("gemm", "a", 1.0, 2.5)
+    cal.update("mamba_scan", "b", 2e-5, 1e-5)
+    back = CostCalibrator.from_json(json.loads(json.dumps(cal.to_json())))
+    assert back.alpha == cal.alpha
+    assert back.drift_threshold == cal.drift_threshold
+    assert len(back) == len(cal) == 2
+    for key in (("gemm", "a"), ("mamba_scan", "b")):
+        assert back.factor(*key) == cal.factor(*key)
+    assert back.stale_classes() == cal.stale_classes()
+    # The restored state continues identically under further updates.
+    cal.update("gemm", "a", 1.0, 3.0)
+    back.update("gemm", "a", 1.0, 3.0)
+    assert back.factor("gemm", "a") == cal.factor("gemm", "a")
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["gemm", "mamba_scan"]),
+                          st.sampled_from(["c0", "c1", "c2"]),
+                          st.floats(0.25, 4.0)),
+                min_size=1, max_size=12))
+def test_roundtrip_preserves_factors_for_any_update_stream(updates):
+    cal = CostCalibrator()
+    for fam, ck, r in updates:
+        cal.update(fam, ck, 1.0, r)
+    back = CostCalibrator.from_json(cal.to_json())
+    for fam, ck, _ in updates:
+        assert back.factor(fam, ck) == cal.factor(fam, ck)
+
+
+# ------------------------------------------------ wiring: parity off/on
+def _bundle():
+    return [GEMM, GEMM, ATTN, SCAN, GemmDesc(16, 1024, 4096),
+            GemmDesc(16, 1024, 4096)]
+
+
+def test_empty_calibrator_is_bitwise_identical_to_none():
+    # PR-parity gate: attaching a calibrator that has seen nothing must
+    # not perturb a single plan (same floats, same groupings).
+    lib = GOLibrary()
+    base = ConcurrencyController(library=lib)
+    cal = ConcurrencyController(library=lib, calibrator=CostCalibrator())
+    descs = _bundle()
+    assert base.plan_mixed(descs) == cal.plan_mixed(descs)
+    gemms = [d for d in descs if isinstance(d, GemmDesc)]
+    assert base.plan(gemms) == cal.plan(gemms)
+    qkv = [GemmDesc(8, 512, 2048), GemmDesc(8, 512, 2048),
+           GemmDesc(8, 512, 2048)]
+    assert base.plan_shared_input(qkv) == cal.plan_shared_input(qkv)
+
+
+def test_corrections_do_not_leak_into_stored_plans():
+    # Selection-time only: the winning schedule carries RAW modeled
+    # times, so telemetry ratios stay raw and the EWMA cannot integrate
+    # its own corrections.
+    lib = GOLibrary()
+    cal = CostCalibrator()
+    for d in _bundle():
+        cal.update(family_of(d), compat_key(d), 1.0, 4.0)
+    base = ConcurrencyController(library=lib)
+    ctrl = ConcurrencyController(library=lib, calibrator=cal)
+    sched = ctrl.plan_mixed(_bundle())
+    raw = base.plan_mixed(_bundle())
+    # Equal bias everywhere ⇒ same chunking wins; times must be raw.
+    assert sched == raw
+
+
+# ---------------------------------------- wiring: oracle CD choice grid
+def _seeded(biases: dict) -> CostCalibrator:
+    cal = CostCalibrator()
+    for (fam, ck), b in biases.items():
+        cal.update(fam, ck, 1.0, b)
+    return cal
+
+
+def test_calibrated_cd_choice_matches_bias_corrected_oracle():
+    # Test grid: heterogeneous bundles of varying size/composition.  The
+    # oracle is a controller seeded with the exact true biases; the
+    # online controller learns them from a 25-sample telemetry-shaped
+    # stream.  Their chunk choices must agree on every cell.
+    lib = GOLibrary()
+    biases = {
+        ("gemm", compat_key(GEMM)): 5.0,       # model very optimistic
+        ("gemm", compat_key(GemmDesc(16, 1024, 4096))): 1.0,
+        ("mamba_scan", compat_key(SCAN)): 0.2,  # model very pessimistic
+        ("flash_attention", compat_key(ATTN)): 1.5,
+    }
+    online = CostCalibrator()
+    for _ in range(25):
+        for (fam, ck), b in biases.items():
+            online.update(fam, ck, 1.0, b)
+    grid = [
+        [GEMM, GEMM, SCAN, SCAN],
+        [GEMM, SCAN, ATTN, GemmDesc(16, 1024, 4096)],
+        [GEMM, GEMM, GEMM, GEMM, SCAN, SCAN, ATTN, ATTN],
+        [SCAN, ATTN],
+        [GEMM] * 6,
+    ]
+    ctrl_online = ConcurrencyController(library=lib, calibrator=online)
+    ctrl_oracle = ConcurrencyController(library=lib,
+                                        calibrator=_seeded(biases))
+    for descs in grid:
+        got = ctrl_online.plan_mixed(descs)
+        want = ctrl_oracle.plan_mixed(descs)
+        assert [(g.indices, g.cd, g.mode) for g in got.groups] == \
+            [(g.indices, g.cd, g.mode) for g in want.groups]
+
+
+def test_fuse_vs_group_choice_flips_under_cross_class_bias():
+    # §6.11: the fused QKV GEMM lives in a different compat class than
+    # the grouped members, so a fused-class-only bias can legitimately
+    # flip the choice — while the *returned times* stay raw.
+    lib = GOLibrary()
+    qkv = [GemmDesc(8, 512, 2048), GemmDesc(8, 512, 2048),
+           GemmDesc(8, 512, 2048)]
+    fused = GemmDesc(8, 1536, 2048)
+    base = ConcurrencyController(library=lib)
+    choice0, tf0, tg0 = base.plan_shared_input(qkv)
+
+    cal = CostCalibrator()
+    bias = 8.0 if choice0 == "fuse" else 0.125
+    cal.update("gemm", compat_key(fused), 1.0, bias)
+    ctrl = ConcurrencyController(library=lib, calibrator=cal)
+    choice1, tf1, tg1 = ctrl.plan_shared_input(qkv)
+    assert choice1 != choice0
+    assert (tf1, tg1) == (tf0, tg0)      # times reported raw either way
+
+
+# --------------------------------------- wiring: runtime drift → retune
+def _calibrated_runtime() -> Runtime:
+    ctrl = ConcurrencyController(library=GOLibrary(),
+                                 calibrator=CostCalibrator())
+    return Runtime(ctrl, RuntimeConfig(window_s=0.0, execute=True))
+
+
+def test_runtime_feeds_calibration_and_queues_one_retune(monkeypatch):
+    rt = _calibrated_runtime()
+    d = GemmDesc(256, 512, 512)
+    # Deterministic "hardware": every launch takes 3× its modeled time.
+    monkeypatch.setattr(
+        rt, "_execute", lambda launch: launch.plan.modeled_time_s * 3.0)
+    for _ in range(2):
+        rt.submit(GemmRequest(desc=d), now=0.0)
+        rt.flush(now=1.0)
+    cal = rt.ctrl.calibrator
+    assert math.isclose(cal.factor("gemm", compat_key(d)), 3.0,
+                        rel_tol=1e-9)
+    # |log 3| > threshold on the first sample → ONE queued re-tune; the
+    # second biased flush is the same excursion (drift was reset).
+    assert rt.pending_retunes() == 1
+    ratios = rt.telemetry.class_ratios()
+    assert ratios[compat_key(d)]["n"] == 2
+    assert ratios[compat_key(d)]["geomean_ratio"] == pytest.approx(3.0)
+
+    before = len(rt.ctrl.lib)
+    assert rt.process_retunes() >= 1     # stale entries re-tuned
+    assert rt.pending_retunes() == 0
+    assert len(rt.ctrl.lib) == before    # invalidated then re-tuned
+    assert rt.process_retunes() == 0     # queue drained
+
+
+def test_runtime_without_calibrator_has_no_retune_path():
+    ctrl = ConcurrencyController(library=GOLibrary())
+    rt = Runtime(ctrl, RuntimeConfig(window_s=0.0))
+    rt.submit(GemmDesc(256, 512, 512), now=0.0)
+    rt.flush(now=1.0)
+    assert rt.pending_retunes() == 0
+    assert rt.process_retunes() == 0

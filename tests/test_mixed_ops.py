@@ -6,7 +6,8 @@ Covers the §14 contracts:
 - family tuning (`tune_op`) produces fully-populated, feasible GO entries;
 - §6.7 isolation property: adding non-GEMM ops to a bundle never changes
   the compatibility class or the planned grouping of the GEMM-only subset;
-- GO-library v2 → v4 migration preserves every v2 entry bitwise;
+- GO-library v2/v3/v4 → v5 migration preserves every entry bitwise, and
+  v5 measured provenance never perturbs planning;
 - the runtime's mixed-bundle queue co-schedules all four kernel families
   with a modeled speedup over sequential and a zero-eval steady state;
 - mixed-group execution routes every family through its real kernel and
@@ -160,7 +161,7 @@ def test_nongemm_ops_never_change_gemm_subset_class(gemms, ops, seed):
     assert _gemm_groups(ctrl, gemm_descs) == _gemm_groups(ctrl, mixed)
 
 
-# ---------------------------------------------------- v2/v3→v4 library
+# ------------------------------------------------- v2/v3/v4→v5 library
 def _v2_blob(entries):
     return {"schema": 2, "entries": entries}
 
@@ -186,12 +187,12 @@ _V2_TILE = st.tuples(st.sampled_from([8, 64, 256]),
     }),
     min_size=1, max_size=3,
 ))
-def test_v2_to_v4_migration_preserves_entries_bitwise(tmp_path_factory,
+def test_v2_to_v5_migration_preserves_entries_bitwise(tmp_path_factory,
                                                       entries):
-    """Every v2 entry survives the v4 migration bit-for-bit: tiles
-    (split-K included, stream_k defaulting to 0), rc sources, and float
-    speedups unchanged; the re-saved file is v4 with the GEMM family
-    default and 5-element tile lists."""
+    """Every v2 entry survives the chained hop to the current schema
+    bit-for-bit: tiles (split-K included, stream_k defaulting to 0), rc
+    sources, and float speedups unchanged; the re-saved file is current
+    (v5) with the GEMM family default and 5-element tile lists."""
     tmp_path = tmp_path_factory.mktemp("golib_v2")
     blob = _v2_blob({
         k: {**v, "isolated": list(v["isolated"]),
@@ -219,17 +220,18 @@ def test_v2_to_v4_migration_preserves_entries_bitwise(tmp_path_factory,
         assert sv["family"] == "gemm"
         assert sv["isolated"] == list(v["isolated"]) + [0]
         assert sv["speedup"] == v["speedup"]
-    # reload at v4: no warning, entries intact
+    # reload at v5: no warning, entries intact
     lib2 = GOLibrary(p)
     assert lib2.loaded_schema == SCHEMA_VERSION
     assert lib2.entries().keys() == lib.entries().keys()
 
 
-def test_v3_to_v4_migration_preserves_entries_bitwise(tmp_path):
-    """A v3 blob (4-element tiles + family field) migrates to v4
-    bitwise: tiles gain ``stream_k=0``, nothing else moves — v4 only
-    widened the Step-② candidate set with a strict tie-break, so v3
-    picks are exactly what the current tuner would keep on ties."""
+def test_v3_to_v5_migration_preserves_entries_bitwise(tmp_path):
+    """A v3 blob (4-element tiles + family field) chains to the current
+    schema bitwise: tiles gain ``stream_k=0``, nothing else moves — v4
+    only widened the Step-② candidate set with a strict tie-break and
+    v5 only annotates optional measured provenance, so v3 picks are
+    exactly what the current tuner would keep on ties."""
     entries = {
         "8_128_16384_00_bf16": {
             "family": "gemm",
@@ -266,14 +268,91 @@ def test_v3_to_v4_migration_preserves_entries_bitwise(tmp_path):
         assert sv["isolated"] == v["isolated"] + [0]
         assert sv["go"] == {c: t + [0] for c, t in v["go"].items()}
         assert sv["speedup"] == v["speedup"]
-    lib2 = GOLibrary(p)          # reload at v4: no warning, intact
+    lib2 = GOLibrary(p)          # reload at v5: no warning, intact
     assert lib2.loaded_schema == SCHEMA_VERSION
     assert lib2.entries().keys() == lib.entries().keys()
 
 
+def test_v4_to_v5_migration_preserves_entries_bitwise(tmp_path):
+    """A v4 blob (5-element tiles, no measured fields) migrates to v5
+    bitwise: v5 added only *optional* measured provenance, so every
+    tile, source, and speedup is preserved, the measured fields default
+    empty, and the re-saved v5 records are byte-identical in shape to
+    the v4 ones (no ``measured``/``measure`` keys appear)."""
+    entries = {
+        "8_128_16384_00_bf16": {
+            "family": "gemm",
+            "isolated": [8, 128, 512, 1, 0],
+            "go": {"2": [8, 128, 128, 8, 0], "16": [8, 512, 128, 1, 4]},
+            "rc_source": {"2": "GPU", "16": "GPU/4"},
+            "speedup": {"2": 2.0625, "16": 3.1},
+        },
+        "scan_8_1_8_64_32_bf16": {
+            "family": "mamba_scan",
+            "isolated": [64, 128, 128, 1, 0],
+            "go": {"4": [32, 128, 128, 1, 0]},
+            "rc_source": {"4": "GPU/2"},
+            "speedup": {"4": 1.75},
+        },
+    }
+    p = tmp_path / "golib.json"
+    p.write_text(json.dumps({"schema": 4, "entries": entries}))
+    with pytest.warns(UserWarning, match="migrating"):
+        lib = GOLibrary(p)
+    assert lib.loaded_schema == 4 and len(lib) == 2
+    for k, v in entries.items():
+        e = lib.entries()[k]
+        assert e.family == v["family"]
+        assert e.isolated == TileConfig(*v["isolated"])
+        assert e.go == {int(c): TileConfig(*t) for c, t in v["go"].items()}
+        assert e.rc_source == {int(c): s for c, s in v["rc_source"].items()}
+        assert e.speedup == {int(c): s for c, s in v["speedup"].items()}
+        # v5 measured provenance defaults to absent
+        assert e.measured == {} and e.measure_backend is None
+        assert e.measure_samples == 0 and e.measure_run_id is None
+    lib.save()
+    saved = json.loads(p.read_text())
+    assert saved["schema"] == SCHEMA_VERSION
+    # modeled-only records keep the exact v4 shape — key for key
+    assert saved["entries"] == entries
+    lib2 = GOLibrary(p)          # reload at v5: no warning, intact
+    assert lib2.loaded_schema == SCHEMA_VERSION
+    assert lib2.entries() == lib.entries()
+
+
+def test_v5_measured_entries_plan_identically_to_modeled_twin(tmp_path):
+    """Regression for the §16 planner contract: the planner never
+    consults the measured fields, so a v5 library whose entries carry
+    measured provenance plans exactly like its modeled-only twin."""
+    descs = [GemmDesc(256, 512, 512), GemmDesc(128, 128, 2048)]
+    lib_a = GOLibrary(tmp_path / "a.json")
+    lib_a.prewarm(descs)                        # modeled-only, saved v5
+    blob = json.loads((tmp_path / "a.json").read_text())
+    for rec in blob["entries"].values():
+        rec["measured"] = {"1": 1.25e-4, "2": 9e-5}
+        rec["measure"] = {"backend": "interpret-cpu", "samples": 3,
+                          "run_id": "0123456789ab"}
+    (tmp_path / "b.json").write_text(json.dumps(blob))
+    lib_b = GOLibrary(tmp_path / "b.json")
+    assert lib_b.loaded_schema == SCHEMA_VERSION    # no migration
+    for k, e in lib_a.entries().items():
+        twin = lib_b.entries()[k]
+        assert twin.measured == {1: 1.25e-4, 2: 9e-5}
+        assert twin.measure_backend == "interpret-cpu"
+        # every planner-visible field is identical
+        assert (twin.isolated, twin.go, twin.rc_source, twin.speedup,
+                twin.family) == (e.isolated, e.go, e.rc_source,
+                                 e.speedup, e.family)
+    ctrl_a = ConcurrencyController(library=lib_a)
+    ctrl_b = ConcurrencyController(library=lib_b)
+    bundle = [descs[0], descs[0], descs[1], descs[0]]
+    assert ctrl_a.plan(bundle) == ctrl_b.plan(bundle)
+    assert ctrl_a.plan_mixed(bundle) == ctrl_b.plan_mixed(bundle)
+
+
 def test_v1_blob_still_discarded(tmp_path):
-    """v1 semantics are unchanged by the v4 bump: pre-split-K entries
-    are stale and must be dropped, not migrated."""
+    """v1 semantics are unchanged by the schema bumps: pre-split-K
+    entries are stale and must be dropped, not migrated."""
     d = GemmDesc(256, 256, 256)
     p = tmp_path / "golib.json"
     p.write_text(json.dumps({d.key(): {"isolated": [256, 256, 256],

@@ -299,6 +299,10 @@ def test_telemetry_counts_and_histogram():
     summary = tele.summary()
     assert summary["plan_cache_hit_rate"] == 0.0
     assert summary["modes"]
+    # shadow mode (no execution) has no achieved times → no ratios; the
+    # snapshot is the summary under its §16 name
+    assert summary["class_ratios"] == {}
+    assert tele.snapshot() == summary
 
 
 def test_prewarm_tunes_and_seeds_plan_cache():
@@ -326,6 +330,12 @@ def test_execute_grouped_launches_match_reference():
             rtol=3e-4, atol=3e-4,
         )
     assert any(g.achieved_time_s is not None for g in rt.telemetry.groups)
+    # executed launches feed per-class modeled-vs-achieved ratios (§16)
+    ratios = rt.telemetry.class_ratios()
+    assert ratios[compat_key(d)]["n"] >= 1
+    assert ratios[compat_key(d)]["geomean_ratio"] > 0
+    assert ratios[compat_key(d)]["mean_abs_log"] >= 0
+    assert rt.telemetry.summary()["class_ratios"] == ratios
 
 
 # -------------------------------------------------------------- integration
