@@ -69,9 +69,12 @@ from repro.core import (  # noqa: E402
 )
 from repro.core.gemm_desc import GemmDesc  # noqa: E402
 from repro.core.scheduler import GemmRequest  # noqa: E402
+from repro.core.op_desc import slice_plan  # noqa: E402
 from repro.runtime import (  # noqa: E402
     Runtime,
     RuntimeConfig,
+    TenantSLO,
+    adversarial_trace,
     bursty_trace,
     decode_step_op_descs,
     decode_step_requests,
@@ -230,6 +233,93 @@ def run_mixed_ops(lib: GOLibrary, steps: int = 60) -> Dict[str, object]:
     return out
 
 
+# §17.4 adversarial shape: one tenant's monolithic prefill GEMM
+# (~1.4 ms modeled, compute-bound — slicing it costs ~1% overhead)
+# against many tenants' tiny decode GEMMs (~10 µs, memory-bound).
+ABUSE_DESC = GemmDesc(16384, 8192, 1024)
+LAT_DESCS = (GemmDesc(8, 4096, 1024), GemmDesc(8, 1024, 1024))
+
+
+def run_adversarial(
+    lib: GOLibrary,
+    duration_s: float = 0.3,
+    n_latency: int = 6,
+    rate_hz: float = 200.0,
+    abuse_rate_hz: float = 100.0,
+    seed: int = 7,
+) -> Dict[str, object]:
+    """SLO stress test (DESIGN.md §17.4): replay the same adversarial
+    trace — one abusive tenant submitting monolithic prefill GEMMs plus
+    ``n_latency`` latency-sensitive tenants submitting small decode
+    GEMMs — under the round-robin default and under slicing + EDF +
+    budgeted flush, at equal offered load.  Virtual clock throughout, so
+    the per-tenant p99s are deterministic.  The gated claim: the latency
+    tenants' worst p99 improves ≥ 1.3x at equal total throughput."""
+    trace = adversarial_trace(n_latency, rate_hz, duration_s,
+                              abuse_rate_hz, seed=seed)
+    window = 2e-4
+    systems: Dict[str, Dict[str, object]] = {}
+    for name in ("round-robin", "slo"):
+        if name == "slo":
+            cfg = RuntimeConfig(window_s=window, policy="edf", slicing=True,
+                                flush_budget_s=2.5e-4)
+        else:
+            cfg = RuntimeConfig(window_s=window)
+        rt = Runtime(ConcurrencyController(library=lib), cfg)
+        for i in range(n_latency):
+            rt.set_tenant_slo(f"lat{i}", TenantSLO(
+                "latency", weight=4.0, p99_target_s=2e-3))
+        rt.set_tenant_slo("abuse", TenantSLO(
+            "batch", weight=1.0, p99_target_s=100e-3))
+        rt.prewarm(list(LAT_DESCS) + [ABUSE_DESC])
+        # Tune the piece class once so admission slicing never tunes live.
+        rt.prewarm(list(slice_plan(ABUSE_DESC, 8).pieces))
+        n_req = 0
+        # Merge periodic flush ticks into the arrival stream: a live
+        # dispatcher polls its queues; flushing only at arrivals would
+        # make every arrival gap a service gap for BOTH systems and
+        # drown the policy difference in replay artifacts.
+        tick = window / 2
+        horizon = trace[-1][0] + window
+        ticks = [(i * tick, None) for i in range(1, int(horizon / tick) + 1)]
+        for t, tenant in sorted(ticks + trace, key=lambda e: e[0]):
+            rt.flush(now=t)
+            if tenant is None:
+                continue
+            if tenant == "abuse":
+                rt.submit(ABUSE_DESC, tenant=tenant, now=t)
+                n_req += 1
+            else:
+                for d in LAT_DESCS:
+                    rt.submit(d, tenant=tenant, now=t)
+                    n_req += 1
+        rt.drain(now=horizon)
+        tele = rt.telemetry
+        pct = tele.tenant_percentiles()
+        systems[name] = {
+            "requests": n_req,
+            "tenants": pct,
+            "latency_worst_p99_ms": max(
+                v["p99_ms"] for k, v in pct.items() if k.startswith("lat")),
+            "abuse_p99_ms": pct["abuse"]["p99_ms"],
+            "throughput_req_per_s": n_req / max(rt.device_free_t, 1e-12),
+            "sliced_ops": tele.sliced_ops,
+            "slice_pieces": sum(tele.slice_counts.values()),
+            "deferred_launches": tele.deferred_launches,
+        }
+    rr, slo = systems["round-robin"], systems["slo"]
+    return {
+        "trace": {"n_latency": n_latency, "rate_hz": rate_hz,
+                  "duration_s": duration_s, "abuse_rate_hz": abuse_rate_hz,
+                  "seed": seed, "arrivals": len(trace)},
+        "systems": systems,
+        "p99_gain": rr["latency_worst_p99_ms"]
+        / max(slo["latency_worst_p99_ms"], 1e-9),
+        "throughput_ratio": slo["throughput_req_per_s"]
+        / max(rr["throughput_req_per_s"], 1e-12),
+    }
+
+
 def run_measured(cells: int = 3) -> Dict[str, object]:
     """Measured-vs-modeled columns (DESIGN.md §16): time the GO picks of
     a small decode GEMM grid through `core.measure` on the interpret
@@ -351,6 +441,22 @@ def main(argv=None) -> Dict[str, Dict[str, Dict[str, float]]]:
             f"{mixed['speedup_vs_sequential']:.3f} <= 1.05x")
         assert mixed["hit_rate_steady"] > 0.9
 
+    adversarial = run_adversarial(lib)
+    rr = adversarial["systems"]["round-robin"]
+    slo = adversarial["systems"]["slo"]
+    print(f"# adversarial: latency worst-p99 "
+          f"{rr['latency_worst_p99_ms']:.3f}ms (round-robin) -> "
+          f"{slo['latency_worst_p99_ms']:.3f}ms (slicing+EDF) = "
+          f"{adversarial['p99_gain']:.2f}x gain | "
+          f"{slo['sliced_ops']} ops sliced into {slo['slice_pieces']} "
+          f"pieces, {slo['deferred_launches']} launches deferred | "
+          f"throughput ratio {adversarial['throughput_ratio']:.3f}")
+    assert adversarial["p99_gain"] >= 1.3, (
+        f"adversarial p99 gain {adversarial['p99_gain']:.3f} < 1.3x")
+    assert abs(1.0 - adversarial["throughput_ratio"]) <= 0.05, (
+        f"slicing+EDF throughput deviates >5%: "
+        f"ratio {adversarial['throughput_ratio']:.4f}")
+
     measured = run_measured()
     print(f"# measured: {measured['measured_finite_cells']}/"
           f"{measured['measured_cells']} cells finite on "
@@ -358,7 +464,7 @@ def main(argv=None) -> Dict[str, Dict[str, Dict[str, float]]]:
     assert measured["measured_finite_cells"] == measured["measured_cells"], \
         "measurement harness produced non-finite/zero timings"
 
-    _write_bench_json(results, mixed, measured, flags)
+    _write_bench_json(results, mixed, measured, adversarial, flags)
     lib.save()
 
     if not args.no_verify:
@@ -378,7 +484,7 @@ def main(argv=None) -> Dict[str, Dict[str, Dict[str, float]]]:
     return results
 
 
-def _write_bench_json(results, mixed, measured, flags) -> None:
+def _write_bench_json(results, mixed, measured, adversarial, flags) -> None:
     """`results/BENCH_serving.json`: the serving benchmark's count-based
     metric record.  ``trend_metrics`` is the generic contract consumed by
     `benchmarks/trend.py` (the CI bench-trend gate): each entry declares
@@ -424,11 +530,23 @@ def _write_bench_json(results, mixed, measured, flags) -> None:
     # microseconds live in the report but are never trend-gated.
     trend["measured_cells"] = {
         "value": measured["measured_finite_cells"], "better": "higher"}
+    # §17.4 SLO gate: deterministic virtual-clock ratios and counts.
+    slo = adversarial["systems"]["slo"]
+    trend["adversarial_p99_gain"] = {
+        "value": round(adversarial["p99_gain"], 4), "better": "higher"}
+    trend["adversarial_throughput_ratio"] = {
+        "value": round(adversarial["throughput_ratio"], 4),
+        "better": "higher"}
+    trend["adversarial_requests"] = {
+        "value": slo["requests"], "better": "higher"}
+    trend["adversarial_slice_pieces"] = {
+        "value": slo["slice_pieces"], "better": "higher"}
     blob = {
         "flags": flags,
         "traces": results,
         "mixed_ops": mixed,
         "measured": measured,
+        "adversarial": adversarial,
         "trend_metrics": trend,
     }
     out = RESULTS / "BENCH_serving.json"

@@ -3,15 +3,17 @@ concurrency control, adapted to TPU (see DESIGN.md)."""
 from repro.core.cost_model import (
     DEFAULT_SPEC,
     RC_FRACTIONS,
+    SLICE_OVERHEAD_S,
     CostCalibrator,
     TPUSpec,
     group_time,
     isolated_time,
     kernel_stats,
     sequential_time,
+    sliced_time,
     speedup_vs_sequential,
 )
-from repro.core.gemm_desc import GemmDesc
+from repro.core.gemm_desc import GemmDesc, split_spans
 from repro.core.library import GOLibrary, default_library
 from repro.core.measure import (
     Measurement,
@@ -23,8 +25,10 @@ from repro.core.op_desc import (
     AttentionDesc,
     GroupedGemmDesc,
     ScanDesc,
+    SlicePlan,
     family_of,
     op_from_key,
+    slice_plan,
 )
 from repro.core.predictor import (
     CLASSES,
@@ -58,7 +62,8 @@ __all__ = [
     "DEFAULT_SPEC", "RC_FRACTIONS", "TPUSpec", "group_time", "isolated_time",
     "kernel_stats", "sequential_time", "speedup_vs_sequential", "GemmDesc",
     "CostCalibrator", "Measurement", "Measurer", "backend_tag",
-    "execute_schedule",
+    "execute_schedule", "SLICE_OVERHEAD_S", "sliced_time", "split_spans",
+    "SlicePlan", "slice_plan",
     "GOLibrary", "default_library", "FAMILIES", "AttentionDesc",
     "GroupedGemmDesc", "ScanDesc", "family_of", "op_from_key", "CLASSES",
     "Predictor", "accuracy_by_available", "gemm_features",

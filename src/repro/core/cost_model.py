@@ -511,6 +511,30 @@ def isolated_time(
     return float(isolated_time_batch(d, t, spec, vmem_budget, bw_frac))
 
 
+# Per-piece charge for Kernelet-style op slicing (DESIGN.md §17.1): each
+# slice is a real extra launch plus a merge-concat touch of its output.
+# Small relative to CP_OVERHEAD_S-scale dispatch — slicing a compute-bound
+# prefill into ≤8 pieces costs ~1% of its runtime, so the admission policy
+# (runtime.py §17.2) can slice aggressively without cooking the model.
+SLICE_OVERHEAD_S = 2e-6
+
+
+def sliced_time(
+    d, t, parts: int, spec: TPUSpec = DEFAULT_SPEC,
+) -> float:
+    """Modeled latency of running ``d`` as ``parts`` sequential slices.
+
+    Sum of the pieces' isolated times plus `SLICE_OVERHEAD_S` per piece;
+    ``parts=1`` charges no overhead and equals `isolated_time`."""
+    pieces = d.slice(parts) if getattr(d, "can_slice", False) else [d]
+    total = 0.0
+    for p in pieces:
+        total += float(isolated_time_batch(p, t, spec))
+    if len(pieces) > 1:
+        total += len(pieces) * SLICE_OVERHEAD_S
+    return total
+
+
 def sequential_time(
     members: Sequence[tuple[GemmDesc, TileConfig]],
     spec: TPUSpec = DEFAULT_SPEC,

@@ -8,6 +8,22 @@ import jax.numpy as jnp
 DTYPE_BYTES = {"bf16": 2, "f32": 4, "f16": 2}
 
 
+def split_spans(total: int, parts: int) -> list:
+    """Balanced contiguous [lo, hi) spans of ``range(total)`` — the one
+    splitting rule every family's `slice()` uses (DESIGN.md §17.1), so
+    slice geometry is deterministic and `slice_plan` can re-derive the
+    operand ranges without a side channel.  ``parts`` is clamped to
+    [1, total]; earlier spans absorb the remainder."""
+    parts = max(1, min(int(parts), int(total)))
+    base, extra = divmod(int(total), parts)
+    spans, lo = [], 0
+    for i in range(parts):
+        hi = lo + base + (1 if i < extra else 0)
+        spans.append((lo, hi))
+        lo = hi
+    return spans
+
+
 @dataclass(frozen=True, order=True)
 class GemmDesc:
     """A GEMM input in the paper's M_N_K_T1_T2 notation (+ dtype).
@@ -68,3 +84,21 @@ class GemmDesc:
 
     def with_batch(self, b: int) -> "GemmDesc":
         return replace(self, batch=b)
+
+    # ------------------------------------------------ slicing (§17.1)
+    @property
+    def can_slice(self) -> bool:
+        """M-sliceable: plain GEMMs only (a B-GEMM's batch dim is the
+        §6.7 `same`-pool axis, not a free row dim) with M ≥ 2."""
+        return self.batch == 1 and self.M >= 2
+
+    def slice(self, parts: int) -> list:
+        """Split along M into ≤ ``parts`` contiguous pieces.  Pieces are
+        ordinary `GemmDesc`s in the SAME §6.7 compatibility class as the
+        parent (the class key is M-free); outputs merge by row
+        concatenation (`core.op_desc.slice_plan` carries the recipe).
+        ``slice(1)`` is the identity."""
+        if parts <= 1 or not self.can_slice:
+            return [self]
+        return [replace(self, M=hi - lo)
+                for lo, hi in split_spans(self.M, parts)]

@@ -32,10 +32,10 @@ round-trip exactly).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Tuple
+from dataclasses import dataclass, replace
+from typing import List, Tuple
 
-from repro.core.gemm_desc import DTYPE_BYTES, GemmDesc
+from repro.core.gemm_desc import DTYPE_BYTES, GemmDesc, split_spans
 
 FAMILIES = ("gemm", "grouped_gemm", "flash_attention", "mamba_scan")
 
@@ -100,6 +100,42 @@ class AttentionDesc:
         return (f"fa_{self.B}_{self.Hq}_{self.Hkv}_{self.Sq}_{self.Skv}_"
                 f"{self.D}_{int(self.causal)}_{self.dtype}")
 
+    # ------------------------------------------------ slicing (§17.1)
+    def _slice_axis(self) -> str:
+        """``"sq"`` — sequence chunks of query rows (the monolithic
+        prefill case); ``"batch"`` — independent sequences (the decode
+        Sq = 1 case).  Causal Sq-slicing requires the suffix alignment
+        to be well-formed (Skv ≥ Sq) so every piece keeps a
+        non-negative q_offset."""
+        if self.Sq >= 2 and (not self.causal or self.Skv >= self.Sq):
+            return "sq"
+        return "batch" if self.B >= 2 else ""
+
+    @property
+    def can_slice(self) -> bool:
+        return bool(self._slice_axis())
+
+    def slice(self, parts: int) -> list:
+        """Split into ≤ ``parts`` pieces along sequence chunks (Sq ≥ 2)
+        or batch (decode).  Sq-slicing of a causal op shrinks each
+        piece's Skv to the keys its last query row may see, so the
+        piece's own suffix alignment (q_offset = Skv − Sq) reproduces
+        the parent's mask exactly: piece row j of span [lo, hi) attends
+        keys ≤ (Skv − Sq) + lo + j, bit-for-bit the parent's row
+        lo + j.  ``slice(1)`` is the identity."""
+        axis = self._slice_axis()
+        if parts <= 1 or not axis:
+            return [self]
+        if axis == "sq":
+            off = self.Skv - self.Sq
+            if self.causal:
+                return [replace(self, Sq=hi - lo, Skv=off + hi)
+                        for lo, hi in split_spans(self.Sq, parts)]
+            return [replace(self, Sq=hi - lo)
+                    for lo, hi in split_spans(self.Sq, parts)]
+        return [replace(self, B=hi - lo)
+                for lo, hi in split_spans(self.B, parts)]
+
 
 @dataclass(frozen=True, order=True)
 class GroupedGemmDesc:
@@ -144,6 +180,26 @@ class GroupedGemmDesc:
     def key(self) -> str:
         r = ("_r" + "-".join(str(x) for x in self.rows)) if self.rows else ""
         return f"gg_{self.G}_{self.M}_{self.N}_{self.K}_{self.dtype}{r}"
+
+    # ------------------------------------------------ slicing (§17.1)
+    @property
+    def can_slice(self) -> bool:
+        return self.G >= 2
+
+    def slice(self, parts: int) -> list:
+        """Split along experts into ≤ ``parts`` contiguous expert
+        spans.  Each piece is an ordinary ragged pool carrying its
+        span's explicit row vector; `a`'s rows are in expert order, so
+        outputs merge by row concatenation.  ``slice(1)`` is the
+        identity."""
+        if parts <= 1 or not self.can_slice:
+            return [self]
+        rows = self.row_vector()
+        return [
+            GroupedGemmDesc(hi - lo, sum(rows[lo:hi]), self.N, self.K,
+                            self.dtype, rows=tuple(rows[lo:hi]))
+            for lo, hi in split_spans(self.G, parts)
+        ]
 
 
 @dataclass(frozen=True, order=True)
@@ -194,8 +250,114 @@ class ScanDesc:
     def key(self) -> str:
         return f"ms_{self.B}_{self.T}_{self.H}_{self.P}_{self.N}_{self.dtype}"
 
+    # ------------------------------------------------ slicing (§17.1)
+    @property
+    def can_slice(self) -> bool:
+        """Sliceable along batch only: the T axis carries sequential
+        state (chunk k needs chunk k-1's S), so T-chunks are NOT
+        independent ops — batch sequences are."""
+        return self.B >= 2
+
+    def slice(self, parts: int) -> list:
+        if parts <= 1 or not self.can_slice:
+            return [self]
+        return [replace(self, B=hi - lo)
+                for lo, hi in split_spans(self.B, parts)]
+
 
 OpDesc = object  # structural protocol: GemmDesc | AttentionDesc | ...
+
+
+def can_slice(d) -> bool:
+    """Protocol probe: descriptors without the §17.1 methods never slice."""
+    return bool(getattr(d, "can_slice", False))
+
+
+@dataclass(frozen=True)
+class SlicePlan:
+    """A sliced op's merge recipe (DESIGN.md §17.1).
+
+    ``pieces`` are ordinary OpDescs (admissible, plannable, executable
+    exactly like any other op); ``spans`` are the [lo, hi) ranges along
+    the sliced dimension (``kind``) in the parent's coordinates; and the
+    recipe is two pure functions: `split_operands` maps the parent's
+    operand tuple to per-piece operand tuples for the family adapters
+    (`kernels/*/ops.py:*_for_desc` / `gemm`), and `merge` concatenates
+    the per-piece outputs back into the parent's output along
+    ``merge_axis``.  Exactness is property-tested per family in
+    `tests/test_slicing.py` (bitwise for pure row partitions; the
+    families' existing ref tolerances where reduction order shifts)."""
+
+    parent: object
+    pieces: Tuple[object, ...]
+    kind: str                           # "m" | "experts" | "sq" | "batch"
+    spans: Tuple[Tuple[int, int], ...]
+    merge_axis: int
+
+    @property
+    def parts(self) -> int:
+        return len(self.pieces)
+
+    def split_operands(self, operands: Tuple) -> List[Tuple]:
+        """Per-piece operand tuples, family-shaped exactly as the
+        scheduler's adapters consume them: GEMM ``(a, b)`` (b shared),
+        grouped ``(a, b)`` (rows + expert weights sliced in step),
+        attention ``(q, k, v)`` (causal Sq-slices also trim k/v to the
+        piece's Skv), scan ``(xd, da, B, C)`` (batch-sliced)."""
+        if self.kind == "m":
+            a, b = operands
+            ta = self.parent.ta
+            return [((a[:, lo:hi] if ta else a[lo:hi]), b)
+                    for lo, hi in self.spans]
+        if self.kind == "experts":
+            rows = self.parent.row_vector()
+            offs = [0]
+            for r in rows:
+                offs.append(offs[-1] + r)
+            a, b = operands
+            return [(a[offs[lo]:offs[hi]], b[lo:hi]) for lo, hi in self.spans]
+        if self.kind == "sq":
+            q, k, v = operands
+            out = []
+            for p, (lo, hi) in zip(self.pieces, self.spans):
+                if self.parent.causal:
+                    out.append((q[:, :, lo:hi], k[:, :, :p.Skv],
+                                v[:, :, :p.Skv]))
+                else:
+                    out.append((q[:, :, lo:hi], k, v))
+            return out
+        # "batch": every operand carries the batch on axis 0.
+        return [tuple(x[lo:hi] for x in operands) for lo, hi in self.spans]
+
+    def merge(self, outputs: List):
+        """Concatenate per-piece outputs into the parent's output."""
+        import jax.numpy as jnp
+
+        return jnp.concatenate(list(outputs), axis=self.merge_axis)
+
+
+def slice_plan(d, parts: int) -> SlicePlan:
+    """Slice ``d`` into ≤ ``parts`` pieces with its merge recipe.
+
+    Delegates the piece geometry to the family's `slice()` (one
+    splitting rule, `gemm_desc.split_spans`) and annotates the operand /
+    merge mapping.  ``slice_plan(d, 1)`` wraps the identity."""
+    pieces = d.slice(parts) if can_slice(d) else [d]
+    fam = family_of(d)
+    if fam == "gemm":
+        kind, total, axis = "m", d.M, 0
+    elif fam == "grouped_gemm":
+        kind, total, axis = "experts", d.G, 0
+    elif fam == "mamba_scan":
+        kind, total, axis = "batch", d.B, 0
+    else:
+        ax = d._slice_axis() or "batch"
+        kind = ax
+        total = d.Sq if ax == "sq" else d.B
+        axis = 2 if ax == "sq" else 0
+    spans = tuple(split_spans(total, len(pieces)))
+    return SlicePlan(parent=d, pieces=tuple(pieces), kind=kind,
+                     spans=spans, merge_axis=axis)
 
 
 def op_from_key(key: str):

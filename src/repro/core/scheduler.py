@@ -300,7 +300,8 @@ class ConcurrencyController:
 
     # ------------------------------------------------- mixed-family plan
     def plan_mixed(
-        self, descs: Sequence, available: int | None = None
+        self, descs: Sequence, available: int | None = None,
+        ranks: Sequence[int] | None = None,
     ) -> Schedule:
         """Co-schedule a heterogeneous decode bundle (§14).
 
@@ -316,7 +317,13 @@ class ConcurrencyController:
         chunking of the bundle is modeled and the fastest wins
         (CD_exec = min(best chunk, available)).  The whole decision is
         plan-cached by the runtime, so steady-state bundles skip it
-        entirely (DESIGN.md §10/§13)."""
+        entirely (DESIGN.md §10/§13).
+
+        ``ranks`` (optional, one int per desc, lower = more urgent)
+        stable-sorts the chunking order so same-rank ops keep their
+        submission order but urgent ops land in the *earliest* chunks —
+        the EDF hook (§17.3).  ``ranks=None`` is bitwise-identical to
+        the pre-SLO planner."""
         sched = Schedule(cp_overhead_s=CP_OVERHEAD_S)
         n = len(descs)
         if n == 0:
@@ -324,11 +331,15 @@ class ConcurrencyController:
         cap = self.max_cd if available is None else max(
             1, min(self.max_cd, available))
         entries = [self.lib.get(d) for d in descs]
+        if ranks is None:
+            order = list(range(n))
+        else:
+            order = sorted(range(n), key=lambda i: ranks[i])
 
         def chunk_groups(size: int) -> List[GroupPlan]:
             groups = []
             for lo in range(0, n, size):
-                take = list(range(lo, min(lo + size, n)))
+                take = order[lo:min(lo + size, n)]
                 cd_exec = len(take)
                 if cd_exec == 1:
                     i = take[0]

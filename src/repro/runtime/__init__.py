@@ -13,18 +13,26 @@ from repro.runtime.integration import (
     submit_decode_step,
 )
 from repro.runtime.runtime import (
+    DEFAULT_SLO,
     MIXED_CLASS,
     Launch,
     Runtime,
     RuntimeConfig,
+    TenantSLO,
     Ticket,
 )
 from repro.runtime.telemetry import GroupRecord, Telemetry
-from repro.runtime.traces import bursty_trace, poisson_trace, uniform_trace
+from repro.runtime.traces import (
+    adversarial_trace,
+    bursty_trace,
+    poisson_trace,
+    uniform_trace,
+)
 
 __all__ = [
     "Launch", "Runtime", "RuntimeConfig", "Ticket", "GroupRecord",
-    "Telemetry", "MIXED_CLASS", "bursty_trace", "poisson_trace",
+    "Telemetry", "MIXED_CLASS", "TenantSLO", "DEFAULT_SLO",
+    "adversarial_trace", "bursty_trace", "poisson_trace",
     "uniform_trace", "decode_step_descs", "decode_step_op_descs",
     "decode_step_requests", "prewarm_decode", "submit_decode_bundle",
     "submit_decode_step",

@@ -32,14 +32,19 @@ real pallas kernels (`ConcurrencyController.execute_plan`).
 from __future__ import annotations
 
 import bisect
+import math
 import time
 from collections import OrderedDict
-from dataclasses import dataclass, replace
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.cost_model import EVAL_COUNTER
+from repro.core.cost_model import (
+    EVAL_COUNTER,
+    SLICE_OVERHEAD_S,
+    isolated_time,
+)
 from repro.core.gemm_desc import GemmDesc
-from repro.core.op_desc import family_of
+from repro.core.op_desc import SlicePlan, family_of, slice_plan
 from repro.core.scheduler import (
     CP_OVERHEAD_S,
     ConcurrencyController,
@@ -66,6 +71,38 @@ class RuntimeConfig:
     plan_cache_capacity: int = 512  # LRU entries (queue signatures)
     execute: bool = False           # run launches through the real kernels
     interpret: bool | None = None   # forwarded to pallas when executing
+    # SLO policy (DESIGN.md §17).  The defaults reproduce the pre-SLO
+    # runtime bit-for-bit: round-robin class service, no admission
+    # slicing, unbounded flushes.
+    policy: str = "round-robin"     # "round-robin" | "edf"
+    slicing: bool = False           # slice oversized ops at admission
+    flush_budget_s: float | None = None  # bind ≤ this much modeled work/flush
+    slice_budget_frac: float = 0.5  # slice when iso time > budget * frac
+    max_slices: int = 8             # admission never slices finer than this
+
+
+@dataclass(frozen=True)
+class TenantSLO:
+    """A tenant's service objective (DESIGN.md §17.2).
+
+    ``latency_class`` is "latency" (decode-style, deadline-driven) or
+    "batch" (throughput-driven, deadline = p99 target but outranked);
+    ``weight`` breaks deadline ties — heavier tenants bind first;
+    ``p99_target_s`` turns each submit into an absolute EDF deadline
+    (``submit_t + p99_target_s``), which is what makes the ordering
+    starvation-free: a waiting ticket's deadline only gets *earlier*
+    relative to fresh arrivals."""
+
+    latency_class: str = "batch"
+    weight: float = 1.0
+    p99_target_s: float = 50e-3
+
+    @property
+    def rank(self) -> int:
+        return 0 if self.latency_class == "latency" else 1
+
+
+DEFAULT_SLO = TenantSLO()
 
 
 @dataclass
@@ -79,6 +116,14 @@ class Ticket:
     done_t: Optional[float] = None
     result: object = None           # jax.Array when executed
     plan: Optional[GroupPlan] = None
+    deadline_t: float = math.inf    # submit_t + SLO p99 target (§17.2)
+    rank: int = 1                   # tenant SLO rank at admission
+    # Slicing linkage (§17.1): a sliced submit returns the *parent*
+    # ticket; only the pieces enter the queues.  The parent completes
+    # (and merges results) when its last piece does.
+    parent: Optional["Ticket"] = field(default=None, repr=False)
+    pieces: Optional[List["Ticket"]] = field(default=None, repr=False)
+    merge_plan: Optional[SlicePlan] = field(default=None, repr=False)
 
     @property
     def desc(self) -> GemmDesc:
@@ -87,6 +132,10 @@ class Ticket:
     @property
     def latency_s(self) -> Optional[float]:
         return None if self.done_t is None else self.done_t - self.submit_t
+
+    @property
+    def sliced(self) -> bool:
+        return self.pieces is not None
 
 
 @dataclass
@@ -110,15 +159,18 @@ class _ClassQueue:
     parallel array, so `flush()` never sorts and never rebuilds the
     canonical order — the structural half of the O(µs) fast path."""
 
-    __slots__ = ("tickets", "keys", "_orders", "oldest_t")
+    __slots__ = ("tickets", "keys", "_orders", "oldest_t", "min_deadline",
+                 "max_weight")
 
     def __init__(self) -> None:
         self.tickets: List[Ticket] = []
         self.keys: List[str] = []          # desc keys, canonical order
         self._orders: List[tuple] = []     # bisect keys (no key= needed)
         self.oldest_t = float("inf")       # earliest pending submit time
+        self.min_deadline = float("inf")   # earliest pending EDF deadline
+        self.max_weight = 0.0              # heaviest pending tenant weight
 
-    def add(self, ticket: Ticket) -> None:
+    def add(self, ticket: Ticket, weight: float = 1.0) -> None:
         order = _canonical_order(ticket.desc)
         i = bisect.bisect_right(self._orders, order)
         self._orders.insert(i, order)
@@ -126,12 +178,18 @@ class _ClassQueue:
         self.keys.insert(i, ticket.desc.key())
         if ticket.submit_t < self.oldest_t:
             self.oldest_t = ticket.submit_t
+        if ticket.deadline_t < self.min_deadline:
+            self.min_deadline = ticket.deadline_t
+        if weight > self.max_weight:
+            self.max_weight = weight
 
     def take_all(self) -> tuple[List[Ticket], tuple]:
         """Pop every ticket (already canonically sorted) + signature keys."""
         tickets, keys = self.tickets, tuple(self.keys)
         self.tickets, self.keys, self._orders = [], [], []
         self.oldest_t = float("inf")
+        self.min_deadline = float("inf")
+        self.max_weight = 0.0
         return tickets, keys
 
     def __len__(self) -> int:
@@ -168,6 +226,76 @@ class Runtime:
         # `process_retunes` runs off the dispatch path.
         self._class_descs: Dict[str, Dict[str, GemmDesc]] = {}
         self._retune: List[Tuple[str, str]] = []
+        # SLO state (§17): per-tenant objectives and the memoized
+        # per-desc-key isolated-time estimates admission slicing reads —
+        # steady-state admission touches the cost model ZERO times.
+        self._slos: Dict[str, TenantSLO] = {}
+        self._iso_cache: Dict[str, float] = {}
+
+    # ---------------------------------------------------------- SLOs (§17)
+    def set_tenant_slo(self, tenant: str, slo: TenantSLO) -> None:
+        self._slos[tenant] = slo
+
+    def tenant_slo(self, tenant: str) -> TenantSLO:
+        return self._slos.get(tenant, DEFAULT_SLO)
+
+    def _isolated_estimate(self, desc) -> float:
+        """Memoized modeled isolated time for admission decisions."""
+        key = desc.key()
+        est = self._iso_cache.get(key)
+        if est is None:
+            est = isolated_time(desc, self.ctrl.lib.get(desc).isolated,
+                                self.ctrl.spec)
+            self._iso_cache[key] = est
+        return est
+
+    def _admission_parts(self, desc) -> int:
+        """How many pieces admission should slice ``desc`` into (§17.2):
+        1 (don't slice) unless slicing is on, the op is sliceable, and
+        its modeled isolated time exceeds ``flush_budget_s *
+        slice_budget_frac`` — then just enough pieces to bring each
+        under the threshold, capped at ``max_slices``."""
+        cfg = self.config
+        if (not cfg.slicing or cfg.flush_budget_s is None
+                or not getattr(desc, "can_slice", False)):
+            return 1
+        threshold = cfg.flush_budget_s * cfg.slice_budget_frac
+        if threshold <= 0:
+            return 1
+        est = self._isolated_estimate(desc)
+        if est <= threshold:
+            return 1
+        return min(math.ceil(est / threshold), cfg.max_slices)
+
+    def _make_pieces(self, ticket: Ticket, plan: SlicePlan) -> List[Ticket]:
+        """Build the piece tickets for a sliced parent: ordinary tickets
+        carrying piece descs (and piece operands when the parent has
+        them), deadline/rank inherited, back-linked for completion."""
+        req = ticket.request
+        if family_of(req.desc) == "gemm":
+            operands = (req.a, req.b) if req.a is not None else None
+        else:
+            operands = req.inputs
+        per_piece = (plan.split_operands(operands)
+                     if operands is not None else [None] * plan.parts)
+        pieces: List[Ticket] = []
+        for pdesc, pops in zip(plan.pieces, per_piece):
+            if family_of(pdesc) == "gemm":
+                preq = GemmRequest(
+                    desc=pdesc, tag=req.tag,
+                    a=None if pops is None else pops[0],
+                    b=None if pops is None else pops[1])
+            else:
+                preq = GemmRequest(desc=pdesc, tag=req.tag, inputs=pops)
+            self._seq += 1
+            pieces.append(Ticket(
+                seq=self._seq, tenant=ticket.tenant, request=preq,
+                submit_t=ticket.submit_t, deadline_t=ticket.deadline_t,
+                rank=ticket.rank, parent=ticket))
+        ticket.pieces = pieces
+        ticket.merge_plan = plan
+        self.telemetry.record_slices(ticket.tenant, plan.parts)
+        return pieces
 
     # ------------------------------------------------------------- admit
     def submit(
@@ -176,20 +304,34 @@ class Runtime:
         tenant: str = "default",
         now: float | None = None,
     ) -> Ticket:
-        if isinstance(request, GemmDesc):
+        if not isinstance(request, GemmRequest):
             request = GemmRequest(desc=request)
         now = self.clock() if now is None else now
+        slo = self.tenant_slo(tenant)
         self._seq += 1
         ticket = Ticket(seq=self._seq, tenant=tenant, request=request,
-                        submit_t=now)
-        key = compat_key(request.desc)          # memoized classification
+                        submit_t=now, deadline_t=now + slo.p99_target_s,
+                        rank=slo.rank)
+        parts = self._admission_parts(request.desc)
+        if parts > 1:
+            # §17.2: oversized op — only the pieces enter the queues; the
+            # caller holds the parent, which completes with its last piece.
+            plan = slice_plan(request.desc, parts)
+            for piece in self._make_pieces(ticket, plan):
+                self._enqueue(piece, slo.weight)
+        else:
+            self._enqueue(ticket, slo.weight)   # canonical-position insert
+        self.telemetry.record_submit()
+        return ticket
+
+    def _enqueue(self, ticket: Ticket, weight: float = 1.0,
+                 class_key: str | None = None) -> None:
+        key = class_key if class_key is not None else compat_key(ticket.desc)
         q = self._queues.get(key)
         if q is None:
             q = self._queues[key] = _ClassQueue()
             self._order.append(key)
-        q.add(ticket)                           # canonical-position insert
-        self.telemetry.record_submit()
-        return ticket
+        q.add(ticket, weight)
 
     def submit_bundle(
         self,
@@ -209,6 +351,7 @@ class Runtime:
         signature is canonical, so steady-state traffic replans nothing.
         """
         now = self.clock() if now is None else now
+        slo = self.tenant_slo(tenant)
         q = self._queues.get(MIXED_CLASS)
         if q is None:
             q = self._queues[MIXED_CLASS] = _ClassQueue()
@@ -219,8 +362,15 @@ class Runtime:
                 request = GemmRequest(desc=request)
             self._seq += 1
             ticket = Ticket(seq=self._seq, tenant=tenant, request=request,
-                            submit_t=now)
-            q.add(ticket)
+                            submit_t=now, deadline_t=now + slo.p99_target_s,
+                            rank=slo.rank)
+            parts = self._admission_parts(request.desc)
+            if parts > 1:
+                plan = slice_plan(request.desc, parts)
+                for piece in self._make_pieces(ticket, plan):
+                    q.add(piece, slo.weight)
+            else:
+                q.add(ticket, slo.weight)
             self.telemetry.record_submit()
             out.append(ticket)
         return out
@@ -258,6 +408,7 @@ class Runtime:
         self.ctrl.invalidate_caches()
         self.set_available(res.slot_budget)
         self.invalidate_plans()
+        self._iso_cache.clear()   # admission estimates were per-chip-spec
         self.mesh_resources = res
         return res
 
@@ -309,9 +460,14 @@ class Runtime:
     ) -> List[Launch]:
         """Serve every ripe compatibility class (head waited ≥ window_s).
 
-        Classes are visited round-robin starting after the last serviced
-        class; each class's queue is planned (via the plan cache) and its
-        groups are interleaved round-robin into the launch order.
+        Round-robin (default): classes are visited starting after the
+        last serviced class and their groups interleave into the launch
+        order.  EDF (``config.policy="edf"``, §17.3): ripe classes are
+        served earliest-deadline-first (weight breaks ties), launches
+        are ordered by their members' earliest deadline, and a
+        ``flush_budget_s`` binds only a prefix of that order — the rest
+        requeue with their original deadlines, so a monolithic tenant's
+        backlog yields the device at every flush boundary.
         """
         now = self.clock() if now is None else now
         evals0 = EVAL_COUNTER.evals
@@ -326,10 +482,19 @@ class Runtime:
         self._flush_id += 1
         self.telemetry.record_flush(self.queue_depths())
 
-        # Rotate so each flush starts service at a different class (fairness).
-        start = self._rr % max(len(self._order), 1)
-        rotated = [k for k in self._order[start:] + self._order[:start] if k in ripe]
-        self._rr = (self._order.index(rotated[0]) + 1) % len(self._order)
+        edf = self.config.policy == "edf"
+        if edf:
+            # Earliest-deadline class first; deadlines are absolute, so a
+            # waiting class only rises in this order — no starvation.
+            rotated = sorted(ripe, key=lambda k: (
+                self._queues[k].min_deadline, -self._queues[k].max_weight, k))
+        else:
+            # Rotate so each flush starts service at a different class
+            # (fairness).
+            start = self._rr % max(len(self._order), 1)
+            rotated = [k for k in self._order[start:] + self._order[:start]
+                       if k in ripe]
+            self._rr = (self._order.index(rotated[0]) + 1) % len(self._order)
 
         per_class: List[List[Launch]] = []
         planning_s = 0.0
@@ -340,10 +505,22 @@ class Runtime:
             # any future regression to a full re-sort).
             tickets, sig_keys = self._queues[key].take_all()
             if key == MIXED_CLASS:
-                sched, hit = self._plan_for_keys(
-                    (MIXED_CLASS,) + sig_keys,
-                    lambda: [t.desc for t in tickets],
-                    planner=self.ctrl.plan_mixed)
+                ranks = [t.rank for t in tickets] if edf else None
+                if ranks is not None and len(set(ranks)) > 1:
+                    # Rank-aware chunking changes the plan, so the rank
+                    # pattern joins the signature; tenant ranks are
+                    # static, so steady-state traffic still hits.
+                    sched, hit = self._plan_for_keys(
+                        (MIXED_CLASS,) + sig_keys
+                        + ("ranks:" + "".join(map(str, ranks)),),
+                        lambda: [t.desc for t in tickets],
+                        planner=lambda descs, available: self.ctrl.plan_mixed(
+                            descs, available=available, ranks=ranks))
+                else:
+                    sched, hit = self._plan_for_keys(
+                        (MIXED_CLASS,) + sig_keys,
+                        lambda: [t.desc for t in tickets],
+                        planner=self.ctrl.plan_mixed)
             else:
                 sched, hit = self._plan_for_keys(
                     sig_keys, lambda: [t.desc for t in tickets])
@@ -356,21 +533,60 @@ class Runtime:
                 for gp in sched.groups
             ])
 
-        launches = _interleave(per_class)
+        if edf:
+            launches = [ln for groups in per_class for ln in groups]
+            launches.sort(key=lambda ln: (
+                min(tk.deadline_t for tk in ln.tickets),
+                -max(self.tenant_slo(tk.tenant).weight for tk in ln.tickets),
+                min(tk.seq for tk in ln.tickets)))
+        else:
+            launches = _interleave(per_class)
+
+        # Budgeted (preemptible) flush §17.3: the budget is a COMMIT
+        # HORIZON — a flush may bind launches only until the modeled
+        # device is committed through ``now + flush_budget_s``.  Work
+        # past the horizon requeues (deadlines intact), so later
+        # flushes re-order it against whatever arrived meanwhile: this
+        # is what keeps a sliced prefill preemptible instead of merely
+        # chopped.  If the device is already committed past the horizon
+        # nothing binds this flush; otherwise at least one launch does
+        # (even one that overshoots), so forced flushing makes progress.
+        base = max(self.device_free_t, now + planning_s)
+        budget = self.config.flush_budget_s
+        if budget is not None:
+            horizon = now + budget
+            acc, cut = base, 0
+            for launch in launches:
+                if cut == 0:
+                    # Only prior *committed* work blocks the first launch;
+                    # planning overhead may overshoot (a forced flush on an
+                    # idle device must always make progress, or drain spins).
+                    if self.device_free_t > horizon:
+                        break
+                elif acc + _launch_cost(launch) > horizon:
+                    break
+                acc += _launch_cost(launch)
+                cut += 1
+            if cut < len(launches):
+                for launch in launches[cut:]:
+                    self._requeue(launch)
+                self.telemetry.record_deferred(len(launches) - cut)
+                launches = launches[:cut]
 
         # Modeled single-device timeline; real execution optionally rides it.
         # Planning cost (cache misses) is hidden behind prior kernels when
         # the device is busy (§6.5) but delays dispatch when it is idle —
         # this is where the plan cache buys measurable latency.
-        t = max(self.device_free_t, now + planning_s)
+        t = base
         for launch in launches:
             launch.start_t = t
-            t += launch.plan.modeled_time_s
+            t += _launch_cost(launch)
             launch.end_t = t
             achieved = self._execute(launch) if self.config.execute else None
             for ticket in launch.tickets:
                 ticket.done_t = launch.end_t
                 ticket.plan = launch.plan
+                self._finish(ticket)
             # §6.11 fusion happens before admission (one wide request with a
             # "-fused" tag); surface it in telemetry instead of "single".
             mode = launch.plan.mode
@@ -387,7 +603,8 @@ class Runtime:
                 cache_hit=launch.cache_hit,
             ))
             self._feed_calibration(launch, achieved)
-        self.device_free_t = t
+        if launches:
+            self.device_free_t = t
         self._queue_stale_retunes()
         self.telemetry.record_flush_fastpath(
             EVAL_COUNTER.evals - evals0,
@@ -396,11 +613,44 @@ class Runtime:
         return launches
 
     def drain(self, now: float | None = None) -> List[Launch]:
-        """Force-flush until every queue is empty."""
+        """Force-flush until every queue is empty.  Under a flush budget
+        a flush can bind nothing (device committed past the horizon), so
+        drain advances its virtual clock to the commit edge and retries —
+        exactly what a live dispatcher polling on ticks would observe."""
         out: List[Launch] = []
+        cur = self.clock() if now is None else now
         while self.pending():
-            out += self.flush(now=now, force=True)
+            got = self.flush(now=cur, force=True)
+            out += got
+            if not got:
+                cur = max(cur, self.device_free_t)
         return out
+
+    # ------------------------------------------------- completion (§17.1)
+    def _finish(self, ticket: Ticket) -> None:
+        """Per-tenant latency accounting + sliced-parent completion: a
+        parent is done when its last piece is; its result is the merge
+        recipe applied to the piece results (when executing)."""
+        parent = ticket.parent
+        if parent is None:
+            self.telemetry.record_latency(ticket.tenant, ticket.latency_s)
+            return
+        if any(p.done_t is None for p in parent.pieces):
+            return
+        parent.done_t = max(p.done_t for p in parent.pieces)
+        parent.plan = ticket.plan
+        if all(p.result is not None for p in parent.pieces):
+            parent.result = parent.merge_plan.merge(
+                [p.result for p in parent.pieces])
+        self.telemetry.record_latency(parent.tenant, parent.latency_s)
+
+    def _requeue(self, launch: Launch) -> None:
+        """Return a deferred launch's tickets to their class queue with
+        submit time and deadline intact — deferral only makes them more
+        urgent relative to fresh arrivals (the no-starvation invariant)."""
+        for tk in launch.tickets:
+            self._enqueue(tk, self.tenant_slo(tk.tenant).weight,
+                          class_key=launch.class_key)
 
     # -------------------------------------------------- calibration (§16)
     def _feed_calibration(self, launch: Launch, achieved: Optional[float]):
@@ -457,6 +707,7 @@ class Runtime:
         fresh = self.ctrl.lib.prewarm(list(descs.values()))
         self.ctrl.invalidate_caches()
         self.invalidate_plans()
+        self._iso_cache.clear()
         return fresh
 
     # ---------------------------------------------------------- internals
@@ -532,6 +783,13 @@ def _canonical_order(d: GemmDesc) -> tuple:
     """Stable within-class ordering (largest M first) so equal queue
     contents produce equal signatures regardless of arrival order."""
     return (-d.M, d.key())
+
+
+def _launch_cost(launch: Launch) -> float:
+    """Modeled device time of one launch, including the per-piece slice
+    overhead charge (`cost_model.SLICE_OVERHEAD_S`, §17.1)."""
+    sliced = sum(1 for tk in launch.tickets if tk.parent is not None)
+    return launch.plan.modeled_time_s + sliced * SLICE_OVERHEAD_S
 
 
 def _interleave(per_class: List[List[Launch]]) -> List[Launch]:

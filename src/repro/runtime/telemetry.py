@@ -63,6 +63,13 @@ class Telemetry:
     last_flush_evals: int = 0
     sig_resorts: int = 0
     flush_sig_resorts: int = 0
+    # Multi-tenant SLO accounting (DESIGN.md §17): completed-request
+    # latencies per tenant (parents count once, not per slice) and how
+    # many pieces admission slicing produced per tenant.
+    tenant_lat: Dict[str, List[float]] = field(default_factory=dict)
+    slice_counts: Counter = field(default_factory=Counter)
+    sliced_ops: int = 0
+    deferred_launches: int = 0
 
     # ------------------------------------------------------------- record
     def record_submit(self, n: int = 1) -> None:
@@ -101,7 +108,23 @@ class Telemetry:
 
     def record_group(self, rec: GroupRecord) -> None:
         self.groups.append(rec)
-        self.completed += rec.cd
+
+    def record_latency(self, tenant: str, latency_s: float) -> None:
+        """One *logical* request completed (a sliced op records once, at
+        parent completion — per-piece latencies are an implementation
+        detail the tenant never observes).  ``completed`` therefore
+        matches ``submitted`` in steady state even under slicing."""
+        self.completed += 1
+        self.tenant_lat.setdefault(tenant, []).append(latency_s)
+
+    def record_slices(self, tenant: str, parts: int) -> None:
+        """Admission sliced one op into ``parts`` pieces (§17.2)."""
+        self.sliced_ops += 1
+        self.slice_counts[tenant] += parts
+
+    def record_deferred(self, n: int = 1) -> None:
+        """Launches pushed past a flush budget to the next flush (§17.3)."""
+        self.deferred_launches += n
 
     # ------------------------------------------------------------ derive
     def cache_hit_rate(self) -> float:
@@ -166,6 +189,23 @@ class Telemetry:
             for k, logs in sorted(acc.items())
         }
 
+    def tenant_percentiles(self) -> Dict[str, Dict[str, float]]:
+        """Per-tenant p50/p95/p99 latency (ms, nearest-rank on the sorted
+        sample) plus count — the §17 metric that matters at many users.
+        Plain Python, deterministic, safe inside the dispatch path."""
+        out: Dict[str, Dict[str, float]] = {}
+        for tenant in sorted(self.tenant_lat):
+            lat = sorted(self.tenant_lat[tenant])
+            if not lat:
+                continue
+            out[tenant] = {
+                "n": len(lat),
+                "p50_ms": round(_nearest_rank(lat, 0.50) * 1e3, 4),
+                "p95_ms": round(_nearest_rank(lat, 0.95) * 1e3, 4),
+                "p99_ms": round(_nearest_rank(lat, 0.99) * 1e3, 4),
+            }
+        return out
+
     def snapshot(self) -> Dict[str, object]:
         """Alias of `summary()`."""
         return self.summary()
@@ -189,7 +229,17 @@ class Telemetry:
             "modeled_busy_time_us": round(self.modeled_busy_time_s() * 1e6, 2),
             "queue_depths": self.queue_depth_histogram(),
             "class_ratios": self.class_ratios(),
+            "tenants": self.tenant_percentiles(),
+            "slice_counts": dict(self.slice_counts),
+            "sliced_ops": self.sliced_ops,
+            "deferred_launches": self.deferred_launches,
         }
+
+
+def _nearest_rank(sorted_lat: List[float], q: float) -> float:
+    """Nearest-rank percentile on an already-sorted sample."""
+    i = max(0, math.ceil(q * len(sorted_lat)) - 1)
+    return sorted_lat[i]
 
 
 def _bucket(depth: int) -> str:

@@ -15,7 +15,7 @@ seconds, so replays are deterministic.
 """
 from __future__ import annotations
 
-from typing import List
+from typing import List, Tuple
 
 import numpy as np
 
@@ -63,3 +63,35 @@ def uniform_trace(rate_hz: float, duration_s: float) -> List[float]:
     """Evenly spaced arrivals (deterministic lockstep baseline)."""
     n = int(rate_hz * duration_s)
     return [i / rate_hz for i in range(1, n + 1)]
+
+
+def adversarial_trace(
+    n_latency: int,
+    rate_hz: float,
+    duration_s: float,
+    abuse_rate_hz: float,
+    seed: int = 0,
+) -> List[Tuple[float, str]]:
+    """The §17.4 SLO stress shape: one abusive tenant ("abuse") plus
+    ``n_latency`` latency-sensitive tenants ("lat0".."latN"), merged
+    into one sorted ``(time, tenant)`` stream.
+
+    Each tenant is an independent Poisson process with a seed derived
+    deterministically from ``(seed, tenant index)`` — no module-level
+    RNG state, and adding/removing a tenant never perturbs the others'
+    arrivals.  Ties sort by tenant name, so replays are byte-for-byte
+    reproducible."""
+    if n_latency < 1:
+        raise ValueError(f"n_latency must be >= 1, got {n_latency}")
+    merged: List[Tuple[float, str]] = [
+        (t, "abuse")
+        for t in poisson_trace(abuse_rate_hz, duration_s, seed=seed * 7919)
+    ]
+    for i in range(n_latency):
+        merged += [
+            (t, f"lat{i}")
+            for t in poisson_trace(rate_hz, duration_s,
+                                   seed=seed * 7919 + i + 1)
+        ]
+    merged.sort()
+    return merged

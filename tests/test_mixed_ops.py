@@ -483,3 +483,31 @@ def test_mixed_execute_matches_family_references():
         rtol=2e-4, atol=2e-4)
     yref, _ = ssd_chunk_ref(xd, da, Bm, Cm, chunk=8)
     np.testing.assert_allclose(tks[3].result, yref, rtol=2e-3, atol=2e-3)
+
+
+# ------------------------------------------------------- EDF ranks (§17.3)
+def test_plan_mixed_ranks_none_is_identical():
+    """The EDF hook must be invisible when unused: ranks=None and
+    all-equal ranks reproduce the pre-SLO plan exactly."""
+    ctrl = ConcurrencyController(library=GOLibrary())
+    bundle = list(BUNDLE)
+    base = ctrl.plan_mixed(bundle)
+    assert ctrl.plan_mixed(bundle, ranks=None) == base
+    same = ctrl.plan_mixed(bundle, ranks=[1] * len(bundle))
+    assert [g.indices for g in same.groups] == \
+        [g.indices for g in base.groups]
+
+
+def test_plan_mixed_ranks_place_urgent_ops_in_earliest_chunks():
+    ctrl = ConcurrencyController(library=GOLibrary())
+    bundle = list(BUNDLE)
+    ranks = [1] * len(bundle)
+    ranks[-1] = 0                         # last-submitted op is urgent
+    ranks[2] = 0
+    sched = ctrl.plan_mixed(bundle, available=2, ranks=ranks)
+    order = [i for g in sched.groups for i in g.indices]
+    # stable sort: urgent ops first (submission order preserved within rank)
+    assert order == [2, len(bundle) - 1, 0, 1, 3]
+    assert set(sched.groups[0].indices) == {2, len(bundle) - 1}
+    # every desc is planned exactly once regardless of ranks
+    assert sorted(order) == list(range(len(bundle)))

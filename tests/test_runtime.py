@@ -9,13 +9,17 @@ from repro.configs import get_arch
 from repro.core import ConcurrencyController, GemmDesc, GemmRequest, compat_key
 from repro.kernels.gemm import gemm_ref
 from repro.runtime import (
+    DEFAULT_SLO,
     Runtime,
     RuntimeConfig,
+    TenantSLO,
+    adversarial_trace,
     bursty_trace,
     decode_step_requests,
     poisson_trace,
     submit_decode_step,
 )
+from tests.hypothesis_compat import given, settings, st
 
 SMALL = GemmDesc(256, 512, 512)
 SMALL2 = GemmDesc(1024, 512, 512)      # same compatibility class as SMALL
@@ -368,6 +372,214 @@ def test_submit_decode_step_routes_moe_experts():
     assert any(launch.plan.cd > 1 for launch in launches)
 
 
+# ------------------------------------------------ multi-tenant SLOs (§17)
+BIG = GemmDesc(8192, 512, 512)          # same compat class as SMALL, huge M
+
+
+def test_admission_slices_oversized_ops():
+    """Slicing on + tiny budget: an oversized op enters the queues only
+    as pieces; the parent ticket is what the caller holds."""
+    rt = _runtime(window_s=0.0, slicing=True, flush_budget_s=10.0,
+                  slice_budget_frac=1e-9)      # threshold → everything slices
+    tk = rt.submit(BIG, now=0.0)
+    assert tk.sliced and len(tk.pieces) == rt.config.max_slices
+    assert rt.pending() == rt.config.max_slices   # pieces, not the parent
+    assert sum(p.desc.M for p in tk.pieces) == BIG.M
+    assert all(compat_key(p.desc) == compat_key(BIG) for p in tk.pieces)
+    assert rt.telemetry.sliced_ops == 1
+    assert rt.telemetry.slice_counts["default"] == rt.config.max_slices
+    rt.drain(now=1.0)
+    # parent completes with its last piece, on the modeled timeline
+    assert tk.done_t == max(p.done_t for p in tk.pieces)
+    assert rt.telemetry.completed == 1    # parents count once, pieces don't
+
+
+def test_admission_leaves_small_ops_whole():
+    rt = _runtime(window_s=0.0, slicing=True, flush_budget_s=10.0)
+    tk = rt.submit(GemmDesc(8, 128, 128), now=0.0)
+    assert not tk.sliced and rt.pending() == 1
+    # slicing off entirely → even BIG stays whole
+    rt2 = _runtime(window_s=0.0)
+    assert not rt2.submit(BIG, now=0.0).sliced
+
+
+def test_sliced_execution_merges_parent_result():
+    rt = _runtime(window_s=0.0, execute=True, interpret=True, slicing=True,
+                  flush_budget_s=10.0, slice_budget_frac=1e-9)
+    key = jax.random.PRNGKey(1)
+    d = GemmDesc(128, 192, 128, dtype="f32")
+    a = jax.random.normal(jax.random.fold_in(key, 0), (d.M, d.K))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (d.K, d.N))
+    tk = rt.submit(GemmRequest(desc=d, a=a, b=b), now=0.0)
+    assert tk.sliced
+    rt.drain(now=1.0)
+    assert tk.result is not None and tk.result.shape == (d.M, d.N)
+    np.testing.assert_allclose(tk.result, gemm_ref(a, b),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_edf_flush_serves_earliest_deadline_first():
+    rt = _runtime(window_s=0.0, policy="edf")
+    rt.set_tenant_slo("lat", TenantSLO("latency", weight=4.0,
+                                       p99_target_s=1e-3))
+    # batch tenant floods first; latency tenant arrives after
+    for _ in range(6):
+        rt.submit(OTHER, tenant="batch", now=0.0)
+    lat_tk = rt.submit(SMALL, tenant="lat", now=0.0)
+    launches = rt.flush(now=1.0)
+    assert lat_tk in launches[0].tickets  # earliest deadline goes first
+    deadlines = [min(t.deadline_t for t in ln.tickets) for ln in launches]
+    assert deadlines == sorted(deadlines)
+
+
+def test_edf_deadlines_are_absolute_no_starvation():
+    """A waiting ticket's deadline never moves, so fresh arrivals with
+    the same SLO always sort behind it (bounded wait)."""
+    rt = _runtime(window_s=0.0, policy="edf", flush_budget_s=1e-7)
+    old = rt.submit(SMALL, now=0.0)
+    rt.flush(now=1.0)                     # budget defers nothing ripe yet?
+    fresh = rt.submit(SMALL, now=2.0)
+    assert old.deadline_t < fresh.deadline_t
+    rt.drain(now=3.0)
+    assert old.done_t is not None and fresh.done_t is not None
+    assert old.done_t <= fresh.done_t
+
+
+def test_budgeted_flush_defers_and_drain_terminates():
+    rt = _runtime(window_s=0.0, policy="edf", flush_budget_s=1e-9)
+    for _ in range(5):
+        rt.submit(SMALL, now=0.0)
+    for _ in range(5):
+        rt.submit(OTHER, now=0.0)
+    first = rt.flush(now=1.0)
+    # horizon is tiny: at least one launch binds, the rest requeue
+    assert len(first) >= 1
+    assert rt.pending() > 0 or rt.telemetry.deferred_launches == 0
+    rest = rt.drain(now=1.0)
+    assert rt.pending() == 0
+    assert rt.telemetry.deferred_launches > 0
+    assert rt.telemetry.completed == 10
+    # deferral preserved deadlines → overall completion order still EDF-ish
+    assert all(ln.start_t is not None for ln in first + rest)
+
+
+def test_sliced_plan_cache_signature_stable_steady_state():
+    """Pieces are ordinary descs with canonical keys: a sliced workload
+    reaches the same zero-eval steady state as a whole one (§17.2)."""
+    from repro.core.cost_model import EVAL_COUNTER
+
+    rt = _runtime(window_s=0.0, slicing=True, flush_budget_s=10.0,
+                  slice_budget_frac=1e-9)
+    rt.submit(BIG, now=0.0)               # cold round binds piece plans
+    rt.flush(now=1.0)
+    for r in range(4):
+        now = 10.0 + r
+        rt.submit(BIG, now=now)
+        e0 = EVAL_COUNTER.evals
+        launches = rt.flush(now=now + 0.5)
+        assert launches and all(l.cache_hit for l in launches)
+        assert EVAL_COUNTER.evals - e0 == 0
+        assert rt.telemetry.last_flush_evals == 0
+    assert rt.telemetry.flush_sig_resorts == 0
+
+
+def test_edf_mixed_bundle_ranks_join_signature():
+    """Non-uniform ranks in the mixed queue change the plan, so they
+    join the signature — and static tenant ranks still steady-state."""
+    rt = _runtime(window_s=0.0, policy="edf")
+    rt.set_tenant_slo("lat", TenantSLO("latency", weight=2.0,
+                                       p99_target_s=1e-3))
+    bundle_a = [SMALL, OTHER]
+    bundle_b = [SMALL2]
+
+    def round_(now):
+        rt.submit_bundle(bundle_a, tenant="batch", now=now)
+        rt.submit_bundle(bundle_b, tenant="lat", now=now)
+        return rt.flush(now=now + 0.5)
+
+    first = round_(0.0)
+    assert all(not ln.cache_hit for ln in first)
+    second = round_(10.0)
+    assert second and all(ln.cache_hit for ln in second)
+    assert [(ln.plan.cd, ln.plan.mode) for ln in first] == \
+        [(ln.plan.cd, ln.plan.mode) for ln in second]
+    # rank-0 members land in the earliest chunk of the mixed plan
+    ranked = [min(t.rank for t in ln.tickets) for ln in first]
+    assert ranked[0] == 0
+
+
+def test_set_mesh_composes_with_sliced_queues():
+    """set_mesh must clear the admission estimate cache too — the spec
+    changed, so slicing decisions re-derive — while pending sliced
+    pieces survive and still merge their parent."""
+    from types import SimpleNamespace
+
+    rt = _runtime(window_s=0.0, slicing=True, flush_budget_s=10.0,
+                  slice_budget_frac=1e-9)
+    tk = rt.submit(BIG, now=0.0)
+    assert tk.sliced and rt._iso_cache
+    mesh = SimpleNamespace(axis_names=("data", "model"),
+                           shape={"data": 1, "model": 4})
+    rt.set_mesh(mesh)
+    assert rt._iso_cache == {}            # estimates follow the spec
+    assert rt.plan_cache_size == 0
+    rt.drain(now=1.0)
+    assert tk.done_t is not None
+    assert all(p.done_t is not None for p in tk.pieces)
+
+
+def test_tenant_slo_registry_and_defaults():
+    rt = _runtime()
+    assert rt.tenant_slo("nobody") is DEFAULT_SLO
+    assert DEFAULT_SLO.rank == 1
+    slo = TenantSLO("latency", weight=3.0, p99_target_s=2e-3)
+    assert slo.rank == 0
+    rt.set_tenant_slo("a", slo)
+    assert rt.tenant_slo("a") is slo
+    tk = rt.submit(SMALL, tenant="a", now=5.0)
+    assert tk.deadline_t == pytest.approx(5.0 + 2e-3)
+    assert tk.rank == 0
+
+
+def test_tenant_percentiles_nearest_rank():
+    rt = _runtime()
+    for i in range(1, 101):
+        rt.telemetry.record_latency("t", i * 1e-3)
+    pct = rt.telemetry.tenant_percentiles()["t"]
+    assert pct["n"] == 100
+    assert pct["p50_ms"] == pytest.approx(50.0)
+    assert pct["p95_ms"] == pytest.approx(95.0)
+    assert pct["p99_ms"] == pytest.approx(99.0)
+    summary = rt.telemetry.summary()
+    assert summary["tenants"]["t"] == pct
+    assert "slice_counts" in summary and "deferred_launches" in summary
+
+
+@given(st.lists(st.tuples(st.sampled_from(["lat", "batch"]),
+                          st.sampled_from([0, 1, 2]),
+                          st.floats(0.0, 1e-3)),
+                min_size=1, max_size=12))
+@settings(max_examples=20, deadline=None)
+def test_edf_random_traces_complete_and_order_by_deadline(events):
+    """Property: under EDF + a flush budget, every submission (and every
+    sliced parent) completes — drain always terminates — and the modeled
+    device timeline is monotone across the deferral/requeue churn."""
+    descs = [SMALL, OTHER, BIG]
+    rt = _runtime(window_s=0.0, policy="edf", slicing=True,
+                  flush_budget_s=1e-4, slice_budget_frac=0.5)
+    rt.set_tenant_slo("lat", TenantSLO("latency", weight=4.0,
+                                       p99_target_s=1e-3))
+    tickets = [rt.submit(descs[di], tenant=tn, now=t)
+               for tn, di, t in sorted(events, key=lambda e: e[2])]
+    launches = rt.drain(now=1e-3)
+    assert all(tk.done_t is not None for tk in tickets)
+    for tk in tickets:
+        if tk.sliced:
+            assert all(p.done_t is not None for p in tk.pieces)
+    starts = [ln.start_t for ln in launches]
+    assert starts == sorted(starts)
+
+
 # ------------------------------------------------------------------ traces
 def test_traces_deterministic_sorted_and_bounded():
     a = poisson_trace(1000.0, 0.1, seed=3)
@@ -378,3 +590,20 @@ def test_traces_deterministic_sorted_and_bounded():
     burst = bursty_trace(1000.0, 0.5, seed=4)
     assert burst == sorted(burst)
     assert all(0 < t < 0.5 for t in burst)
+
+
+def test_adversarial_trace_deterministic_and_independent():
+    a = adversarial_trace(3, 500.0, 0.1, 200.0, seed=5)
+    b = adversarial_trace(3, 500.0, 0.1, 200.0, seed=5)
+    assert a == b and a == sorted(a, key=lambda e: (e[0], e[1]))
+    tenants = {tn for _, tn in a}
+    assert tenants == {"abuse", "lat0", "lat1", "lat2"}
+    assert all(0 < t < 0.1 for t, _ in a)
+    # per-tenant streams are independent: adding a tenant never perturbs
+    # the existing tenants' arrivals
+    wider = adversarial_trace(4, 500.0, 0.1, 200.0, seed=5)
+    for tn in tenants:
+        assert [t for t, x in a if x == tn] == \
+            [t for t, x in wider if x == tn]
+    with pytest.raises(ValueError):
+        adversarial_trace(0, 500.0, 0.1, 200.0)

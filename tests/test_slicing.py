@@ -1,0 +1,255 @@
+"""Slice-exactness property layer (DESIGN.md §17.1).
+
+The §17 slicing protocol claims sliced pieces are *ordinary ops*: run
+them through the scheduler's own family adapters (`execute_schedule`
+mixed groups — the exact launch path flushes dispatch) and the merge
+recipe must reproduce the unsliced op.  Row-partition kinds (GEMM M,
+grouped experts, batch) must match **bitwise** — the pieces compute the
+same output elements with the same reduction order; Sq-sliced
+attention is held to the family's existing ref tolerance.  Both
+execution modes are covered: ``interpret=True`` (pallas interpret) and
+``interpret=None`` (the XLA reference path off-TPU).
+
+Also covered: `slice(1)` identity, flops/M partition sums, §6.7
+compatibility-class non-straddling, `can_slice` eligibility flags, and
+hypothesis property versions over random shapes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests.hypothesis_compat import given, settings, st
+
+from repro.core import (
+    AttentionDesc,
+    GemmDesc,
+    GemmRequest,
+    GroupedGemmDesc,
+    ScanDesc,
+    SLICE_OVERHEAD_S,
+    compat_key,
+    family_of,
+    isolated_time,
+    slice_plan,
+    sliced_time,
+    split_spans,
+)
+from repro.core.scheduler import GroupPlan, Schedule, execute_schedule
+from repro.kernels.gemm.ops import TileConfig
+
+TILE = TileConfig(64, 128, 128)
+KEY = jax.random.PRNGKey(0)
+
+# One sliceable case per family/axis, all f32 so ref comparisons are
+# strict; odd sizes exercise the remainder-absorbing spans.
+CASES = (
+    GemmDesc(96, 64, 32, dtype="f32"),
+    GemmDesc(7, 48, 16, ta=True, dtype="f32"),
+    GroupedGemmDesc(5, 24, 32, 16, "f32", rows=(8, 2, 6, 4, 4)),
+    AttentionDesc(2, 4, 2, 64, 96, 32, causal=True, dtype="f32"),
+    AttentionDesc(2, 4, 4, 32, 32, 16, causal=False, dtype="f32"),
+    AttentionDesc(3, 2, 2, 1, 64, 32, causal=True, dtype="f32"),  # decode
+    ScanDesc(4, 16, 2, 8, 8, "f32"),
+)
+
+
+def _operands(d, key=KEY):
+    fam = family_of(d)
+    n = jax.random.normal
+    if fam == "gemm":
+        return (n(jax.random.fold_in(key, 0),
+                  (d.K, d.M) if d.ta else (d.M, d.K), jnp.float32),
+                n(jax.random.fold_in(key, 1),
+                  (d.N, d.K) if d.tb else (d.K, d.N), jnp.float32))
+    if fam == "grouped_gemm":
+        return (n(jax.random.fold_in(key, 0), (d.M, d.K), jnp.float32),
+                n(jax.random.fold_in(key, 1), (d.G, d.K, d.N), jnp.float32))
+    if fam == "flash_attention":
+        return (n(jax.random.fold_in(key, 0), (d.B, d.Hq, d.Sq, d.D),
+                  jnp.float32),
+                n(jax.random.fold_in(key, 1), (d.B, d.Hkv, d.Skv, d.D),
+                  jnp.float32),
+                n(jax.random.fold_in(key, 2), (d.B, d.Hkv, d.Skv, d.D),
+                  jnp.float32))
+    return (n(jax.random.fold_in(key, 0), (d.B, d.T, d.H, d.P), jnp.float32),
+            n(jax.random.fold_in(key, 1), (d.B, d.T, d.H), jnp.float32),
+            n(jax.random.fold_in(key, 2), (d.B, d.T, d.H, d.N), jnp.float32),
+            n(jax.random.fold_in(key, 3), (d.B, d.T, d.H, d.N), jnp.float32))
+
+
+def _run(descs, opss, interpret):
+    """Execute descs through the scheduler's own mixed-group adapters."""
+    reqs = [GemmRequest(desc=d, a=ops[0], b=ops[1])
+            if family_of(d) == "gemm" else GemmRequest(desc=d, inputs=ops)
+            for d, ops in zip(descs, opss)]
+    sched = Schedule(groups=[GroupPlan(
+        indices=list(range(len(reqs))), cd=len(reqs), tile=TILE,
+        mode="mixed", modeled_time_s=0.0, tiles=[TILE] * len(reqs))])
+    return execute_schedule(reqs, sched, interpret=interpret)
+
+
+def _assert_merged_matches(desc, parts, interpret):
+    plan = slice_plan(desc, parts)
+    ops = _operands(desc)
+    whole = _run([desc], [ops], interpret)[0]
+    outs = _run(list(plan.pieces), plan.split_operands(ops), interpret)
+    merged = plan.merge(outs)
+    assert merged.shape == whole.shape and merged.dtype == whole.dtype
+    if plan.kind == "sq":
+        # Sq pieces re-block the softmax accumulation; hold them to the
+        # attention family's ref tolerance rather than bitwise.
+        np.testing.assert_allclose(merged, whole, rtol=3e-4, atol=3e-4)
+    else:
+        # Row partitions: same elements, same reduction order — bitwise.
+        assert jnp.array_equal(merged, whole), plan.kind
+
+
+# -------------------------------------------------- execution exactness
+@pytest.mark.parametrize("interpret", [True, None],
+                         ids=["interpret", "force-ref"])
+@pytest.mark.parametrize("desc", CASES, ids=lambda d: d.key())
+def test_sliced_execution_matches_unsliced(desc, interpret):
+    _assert_merged_matches(desc, 3, interpret)
+
+
+@pytest.mark.parametrize("desc", CASES, ids=lambda d: d.key())
+def test_max_slicing_matches(desc):
+    """parts beyond the axis extent clamps to one-unit pieces."""
+    _assert_merged_matches(desc, 1000, None)
+
+
+# ------------------------------------------------------ protocol algebra
+@pytest.mark.parametrize("desc", CASES, ids=lambda d: d.key())
+def test_slice_one_is_identity(desc):
+    assert desc.slice(1) == [desc]
+    plan = slice_plan(desc, 1)
+    assert plan.pieces == (desc,) and plan.parts == 1
+    ops = _operands(desc)
+    (piece_ops,) = plan.split_operands(ops)
+    assert all(a is b or a.shape == b.shape
+               for a, b in zip(piece_ops, ops))
+
+
+@pytest.mark.parametrize("desc", CASES, ids=lambda d: d.key())
+def test_piece_sums_partition_parent(desc):
+    plan = slice_plan(desc, 3)
+    spans = plan.spans
+    total = {"m": getattr(desc, "M", 0), "experts": getattr(desc, "G", 0),
+             "sq": getattr(desc, "Sq", 0), "batch": getattr(desc, "B", 0)}
+    # Spans are a contiguous partition of the sliced axis.
+    assert spans[0][0] == 0 and spans[-1][1] == total[plan.kind]
+    assert all(a[1] == b[0] for a, b in zip(spans, spans[1:]))
+    if plan.kind != "sq":
+        # Work partitions exactly; attention flops carry the float
+        # causal-credit rounding, checked separately below.
+        assert sum(p.flops for p in plan.pieces) == desc.flops
+    else:
+        rel = abs(sum(p.flops for p in plan.pieces) - desc.flops)
+        assert rel <= max(8, 1e-3 * desc.flops)
+    assert sum(p.M for p in plan.pieces) == desc.M
+
+
+@pytest.mark.parametrize("desc", CASES, ids=lambda d: d.key())
+def test_pieces_never_straddle_compat_classes(desc):
+    plan = slice_plan(desc, 4)
+    for p in plan.pieces:
+        assert family_of(p) == family_of(desc)
+        if family_of(desc) == "gemm":
+            # The §6.7 class key is M-free: pieces pool with the parent.
+            assert compat_key(p) == compat_key(desc)
+            assert p.batch == desc.batch == 1
+
+
+def test_can_slice_eligibility():
+    assert not GemmDesc(1, 64, 64).can_slice          # M=1
+    assert not GemmDesc(64, 64, 64, batch=4).can_slice  # B-GEMM
+    assert GemmDesc(2, 64, 64).can_slice
+    assert not GroupedGemmDesc(1, 8, 16, 16).can_slice  # one expert
+    assert not ScanDesc(1, 16, 2, 8, 8).can_slice       # B=1
+    assert not AttentionDesc(1, 2, 2, 1, 64, 32).can_slice  # B=1, Sq=1
+    # Degenerate causal Sq > Skv: suffix alignment breaks — batch only.
+    d = AttentionDesc(2, 2, 2, 64, 32, 16, causal=True)
+    assert d._slice_axis() == "batch"
+    # Unsliceable descs pass through slice_plan as identity.
+    d1 = GemmDesc(1, 64, 64)
+    assert slice_plan(d1, 8).pieces == (d1,)
+
+
+def test_grouped_slice_carries_explicit_rows():
+    """Uniform-rows parents slice into pieces with explicit row vectors
+    that partition the parent's rows in expert order."""
+    g = GroupedGemmDesc(8, 64, 32, 16)
+    rows = g.row_vector()
+    pieces = g.slice(3)
+    off = 0
+    for p in pieces:
+        assert p.rows == tuple(rows[off:off + p.G])
+        assert p.M == sum(p.rows)
+        off += p.G
+    assert off == g.G
+
+
+def test_sliced_time_charges_overhead():
+    d = GemmDesc(4096, 1024, 512)
+    t1 = sliced_time(d, TILE, 1)
+    assert t1 == pytest.approx(isolated_time(d, TILE))
+    t4 = sliced_time(d, TILE, 4)
+    assert t4 > t1  # pieces + 4 * SLICE_OVERHEAD_S
+    assert t4 - 4 * SLICE_OVERHEAD_S == pytest.approx(
+        sum(isolated_time(p, TILE) for p in d.slice(4)), rel=1e-12)
+
+
+def test_split_spans_properties():
+    for total, parts in ((1, 1), (5, 3), (8, 8), (7, 100), (100, 7)):
+        spans = split_spans(total, parts)
+        assert spans[0][0] == 0 and spans[-1][1] == total
+        assert all(a[1] == b[0] for a, b in zip(spans, spans[1:]))
+        sizes = [hi - lo for lo, hi in spans]
+        assert max(sizes) - min(sizes) <= 1  # balanced
+        assert len(spans) == min(parts, total)
+
+
+# ------------------------------------------------- hypothesis properties
+@given(total=st.integers(1, 4096), parts=st.integers(1, 64))
+@settings(max_examples=50, deadline=None)
+def test_split_spans_partitions_any_range(total, parts):
+    spans = split_spans(total, parts)
+    assert spans[0][0] == 0 and spans[-1][1] == total
+    assert all(a[1] == b[0] for a, b in zip(spans, spans[1:]))
+    assert all(hi > lo for lo, hi in spans)
+
+
+@given(m=st.integers(2, 40), n=st.sampled_from([16, 48]),
+       k=st.sampled_from([16, 32]), parts=st.integers(2, 5),
+       ta=st.booleans())
+@settings(max_examples=8, deadline=None)
+def test_gemm_slice_exact_random(m, n, k, parts, ta):
+    d = GemmDesc(m, n, k, ta=ta, dtype="f32")
+    _assert_merged_matches(d, parts, None)
+
+
+@given(g=st.integers(2, 6), parts=st.integers(2, 4),
+       data=st.data())
+@settings(max_examples=8, deadline=None)
+def test_grouped_slice_exact_random(g, parts, data):
+    rows = tuple(data.draw(st.integers(1, 9)) for _ in range(g))
+    d = GroupedGemmDesc(g, sum(rows), 16, 16, "f32", rows=rows)
+    _assert_merged_matches(d, parts, None)
+
+
+@given(sq=st.integers(2, 48), extra=st.integers(0, 32),
+       parts=st.integers(2, 4), causal=st.booleans())
+@settings(max_examples=8, deadline=None)
+def test_attention_slice_exact_random(sq, extra, parts, causal):
+    d = AttentionDesc(2, 2, 2, sq, sq + extra, 16, causal=causal,
+                      dtype="f32")
+    _assert_merged_matches(d, parts, None)
+
+
+@given(b=st.integers(2, 6), t=st.sampled_from([4, 16]),
+       parts=st.integers(2, 4))
+@settings(max_examples=8, deadline=None)
+def test_scan_slice_exact_random(b, t, parts):
+    d = ScanDesc(b, t, 2, 8, 8, "f32")
+    _assert_merged_matches(d, parts, None)
