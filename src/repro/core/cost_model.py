@@ -1132,8 +1132,12 @@ class CostCalibrator:
         self, family: str, class_key: str, modeled_s: float, achieved_s: float
     ) -> None:
         """Fold one modeled-vs-achieved observation into the class state.
-        Non-positive times carry no ratio information and are ignored."""
-        if modeled_s <= 0 or achieved_s <= 0:
+        Non-positive and non-finite times carry no ratio information and
+        are ignored — a NaN/Inf achieved time (hung or faulted launch,
+        DESIGN.md §18) must never poison the EWMA state."""
+        if (modeled_s <= 0 or achieved_s <= 0
+                or not (math.isfinite(modeled_s)
+                        and math.isfinite(achieved_s))):
             return
         r = math.log(achieved_s / modeled_s)
         st = self._state.get((family, class_key))

@@ -39,9 +39,9 @@ import json
 import os
 import threading
 import warnings
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as dc_replace
 from pathlib import Path
-from typing import Dict, Optional, Sequence
+from typing import Dict, FrozenSet, Optional, Sequence
 
 from repro.core.cost_model import DEFAULT_SPEC, TPUSpec
 from repro.core.gemm_desc import GemmDesc
@@ -78,23 +78,30 @@ class GOLibrary:
         self._entries: Dict[str, GOEntry] = {}
         self._lock = threading.Lock()
         self.loaded_schema: Optional[int] = None
+        # Runtime quarantine state (DESIGN.md §18.3): per desc key, the
+        # tile keys the circuit breaker has banned.  NOT persisted by
+        # `save` — quarantine reflects live failures on this process's
+        # backend, not a property of the tuned library.
+        self._quarantine: Dict[str, set] = {}
         if self.path and self.path.exists():
             self.load(self.path)
 
     # -------------------------------------------------------------- access
     def get(self, desc) -> GOEntry:
         """GO entry for any `OpDesc` family — GEMMs take the batched
-        `tune_gemm` path, other families `tune_op` (§14)."""
+        `tune_gemm` path, other families `tune_op` (§14).  Entries are
+        filtered through the quarantine set on the way out (§18.3), so
+        neither the planner nor the tuner can hand back a banned tile."""
         key = desc.key()
         with self._lock:
             e = self._entries.get(key)
         if e is not None:
-            return e
+            return self._sanitize(key, e)
         e = (tune_gemm(desc, self.spec) if isinstance(desc, GemmDesc)
              else tune_op(desc, self.spec))
         with self._lock:
             self._entries.setdefault(key, e)
-        return self._entries[key]
+        return self._sanitize(key, self._entries[key])
 
     def tile(self, desc, cd: int = 1) -> TileConfig:
         return self.get(desc).tile_for_cd(cd)
@@ -139,6 +146,51 @@ class GOLibrary:
                     n += 1
         return n
 
+    # --------------------------------------------------- quarantine (§18.3)
+    def quarantine(self, keys: Sequence[str], tile_key: str) -> None:
+        """Ban ``tile_key`` for the given desc keys: `get` (and hence
+        `tile`, the tuner memo rebuilds, and plan derivation) substitutes
+        the isolated tile for banned GO picks and drops their speedup
+        claims, so ``preferred_cd`` stops trusting the quarantined
+        kernel.  Paired with `GOLibrary.invalidate` by the circuit
+        breaker so even a re-tune cannot resurrect the tile until
+        `release`."""
+        with self._lock:
+            for k in keys:
+                self._quarantine.setdefault(k, set()).add(tile_key)
+
+    def release(self, keys: Sequence[str], tile_key: str) -> None:
+        """Lift a quarantine (half-open probe, `Runtime.process_retunes`)."""
+        with self._lock:
+            for k in keys:
+                s = self._quarantine.get(k)
+                if s is not None:
+                    s.discard(tile_key)
+                    if not s:
+                        del self._quarantine[k]
+
+    def quarantined(self) -> Dict[str, FrozenSet[str]]:
+        with self._lock:
+            return {k: frozenset(s) for k, s in self._quarantine.items()}
+
+    def _sanitize(self, key: str, e: GOEntry) -> GOEntry:
+        """Apply the quarantine set to one entry on the read path: banned
+        GO tiles degrade to the isolated tile and lose their speedup
+        entry (no stale >1 claim keeps electing the banned CD).  The
+        isolated tile itself is never substituted — it is the ladder's
+        legacy rung, and correctness ultimately rests on the reference
+        rung, not on isolated being healthy."""
+        banned = self._quarantine.get(key)
+        if not banned:
+            return e
+        go = {cd: (e.isolated if t.key() in banned else t)
+              for cd, t in e.go.items()}
+        speedup = {cd: s for cd, s in e.speedup.items()
+                   if e.go[cd].key() not in banned}
+        if go == e.go and speedup == e.speedup:
+            return e
+        return dc_replace(e, go=go, speedup=speedup)
+
     def __len__(self) -> int:
         return len(self._entries)
 
@@ -180,7 +232,14 @@ class GOLibrary:
         tmp.replace(path)
 
     def load(self, path: str | os.PathLike) -> int:
-        """Parse a v1–v5 blob; returns the file's schema version.
+        """Parse a v1–v5 blob; returns the file's schema version (0 when
+        the file is unusable).
+
+        Crash-safe (DESIGN.md §18.4): a corrupt, truncated, or
+        wrong-type blob — the startup equivalent of a bad kernel — warns
+        and leaves the library EMPTY instead of raising, so the server
+        boots and re-tunes lazily exactly as if the cache file had never
+        existed.
 
         v1 entries are *discarded* (tuned on the pre-split-K search space
         — they would mis-plan, DESIGN.md §13) and re-tuned lazily.
@@ -191,11 +250,30 @@ class GOLibrary:
         (DESIGN.md §15/§16), so old picks remain exactly what the
         current tuner would keep — a migration warning notes that the
         next `save` rewrites the file at v5."""
-        blob = json.loads(Path(path).read_text())
+        def _unusable(why: str) -> int:
+            warnings.warn(
+                f"GO library {path} is unusable ({why}); starting with an "
+                "empty library — entries re-tune lazily and the next save "
+                "rewrites the file.", stacklevel=3)
+            self.loaded_schema = None
+            return 0
+
+        try:
+            blob = json.loads(Path(path).read_text())
+        except (OSError, UnicodeDecodeError, ValueError) as e:
+            # json.JSONDecodeError ⊂ ValueError: corrupt/truncated file.
+            return _unusable(f"{type(e).__name__}: {e}")
         if isinstance(blob, dict) and "schema" in blob:
-            schema, entries = int(blob["schema"]), blob["entries"]
+            try:
+                schema = int(blob["schema"])
+            except (TypeError, ValueError):
+                return _unusable(f"non-integer schema {blob['schema']!r}")
+            entries = blob.get("entries")
         else:
             schema, entries = 1, blob           # bare v1 mapping
+        if not isinstance(entries, dict):
+            return _unusable(
+                f"entries is {type(entries).__name__}, expected mapping")
         self.loaded_schema = schema
         if schema < 2:
             warnings.warn(
@@ -213,21 +291,33 @@ class GOLibrary:
                 f"the file at v{SCHEMA_VERSION}.",
                 stacklevel=2,
             )
+        bad = 0
         for k, v in entries.items():
-            meta = v.get("measure", {})
-            self._entries[k] = GOEntry(
-                desc_key=k,
-                isolated=_tile_from_list(v["isolated"]),
-                go={int(cd): _tile_from_list(t) for cd, t in v["go"].items()},
-                rc_source={int(c): s for c, s in v.get("rc_source", {}).items()},
-                speedup={int(c): s for c, s in v.get("speedup", {}).items()},
-                family=v.get("family", "gemm"),
-                measured={int(c): float(t)
-                          for c, t in v.get("measured", {}).items()},
-                measure_backend=meta.get("backend"),
-                measure_samples=int(meta.get("samples", 0)),
-                measure_run_id=meta.get("run_id"),
-            )
+            try:
+                meta = v.get("measure", {})
+                self._entries[k] = GOEntry(
+                    desc_key=k,
+                    isolated=_tile_from_list(v["isolated"]),
+                    go={int(cd): _tile_from_list(t)
+                        for cd, t in v["go"].items()},
+                    rc_source={int(c): s
+                               for c, s in v.get("rc_source", {}).items()},
+                    speedup={int(c): s
+                             for c, s in v.get("speedup", {}).items()},
+                    family=v.get("family", "gemm"),
+                    measured={int(c): float(t)
+                              for c, t in v.get("measured", {}).items()},
+                    measure_backend=meta.get("backend"),
+                    measure_samples=int(meta.get("samples", 0)),
+                    measure_run_id=meta.get("run_id"),
+                )
+            except (AttributeError, KeyError, TypeError, ValueError):
+                bad += 1       # malformed record — skip, re-tune lazily
+        if bad:
+            warnings.warn(
+                f"GO library {path}: skipped {bad} malformed entr"
+                f"{'y' if bad == 1 else 'ies'} — they re-tune lazily.",
+                stacklevel=2)
         return schema
 
 

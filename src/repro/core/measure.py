@@ -73,6 +73,7 @@ class Measurement:
     n: int                  # number of kept samples (after rejection)
     backend: str
     run_id: str
+    hangs: int = 0          # timed samples that blew the watchdog deadline
 
     @property
     def finite(self) -> bool:
@@ -188,6 +189,7 @@ class Measurer:
         clock=time.perf_counter,
         outlier_k: float = 4.0,
         seed: int = 0,
+        deadline_s: float | None = None,
     ):
         self.spec = spec
         self.warmup = max(0, int(warmup))
@@ -197,6 +199,13 @@ class Measurer:
         self.outlier_k = float(outlier_k)
         self.seed = int(seed)
         self.backend = backend_tag(interpret)
+        # Watchdog (DESIGN.md §18.4): a timed sample whose clock bracket
+        # exceeds the deadline is recorded as ``inf`` — MAD rejection
+        # discards a minority of hangs, and an all-hung launch yields a
+        # non-finite median that `Measurement.finite` (and the CLI)
+        # flags instead of wedging or silently averaging garbage.
+        self.deadline_s = None if deadline_s is None else float(deadline_s)
+        self.hangs = 0          # cumulative across this Measurer's calls
 
     # ------------------------------------------------------------ timing
     def measure_schedule(
@@ -224,8 +233,14 @@ class Measurer:
                     "(shadow dispatch cannot be measured)")
             for o in ran:
                 o.block_until_ready()
-            samples.append(self.clock() - t0)
-        kept = reject_outliers(samples[self.warmup:], self.outlier_k)
+            dt = self.clock() - t0
+            if self.deadline_s is not None and dt > self.deadline_s:
+                dt = math.inf   # watchdog: hung sample, see __init__
+            samples.append(dt)
+        timed = samples[self.warmup:]
+        hangs = sum(1 for v in timed if math.isinf(v))
+        self.hangs += hangs
+        kept = reject_outliers(timed, self.outlier_k)
         gp = sched.groups[0]
         run_id = _run_key(
             [r.desc.key() for r in requests],
@@ -233,7 +248,8 @@ class Measurer:
             self.warmup, self.repeats, self.seed)
         return Measurement(
             time_s=float(statistics.median(kept)), samples=tuple(kept),
-            n=len(kept), backend=self.backend, run_id=run_id)
+            n=len(kept), backend=self.backend, run_id=run_id,
+            hangs=hangs)
 
     def measure_group(self, desc, tile: TileConfig, cd: int = 1) -> Measurement:
         """Measure ``cd`` concurrent copies of ``desc`` at ``tile`` via
@@ -329,24 +345,31 @@ def main(argv=None) -> int:
     ap.add_argument("--cd", type=int, default=2)
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--warmup", type=int, default=1)
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-sample watchdog deadline; over-deadline "
+                    "samples count as hangs and are reported")
     args = ap.parse_args(argv)
 
     from repro.core.tuner import tune_gemm
 
-    measurer = Measurer(warmup=args.warmup, repeats=args.repeats)
+    deadline_s = None if args.deadline_ms is None else args.deadline_ms * 1e-3
+    measurer = Measurer(warmup=args.warmup, repeats=args.repeats,
+                        deadline_s=deadline_s)
     bad = 0
     print(f"# backend={measurer.backend} warmup={args.warmup} "
-          f"repeats={args.repeats}")
-    print(f"{'desc':24} {'cd':>3} {'measured_us':>12} {'n':>3}  run_id")
+          f"repeats={args.repeats} deadline_ms={args.deadline_ms}")
+    print(f"{'desc':24} {'cd':>3} {'measured_us':>12} {'n':>3} "
+          f"{'hangs':>5}  run_id")
     for desc in smoke_grid(args.cells):
         entry = tune_gemm(desc)
         for cd in (1, args.cd):
             m = measurer.measure_group(desc, entry.tile_for_cd(cd), cd)
             flag = "" if m.finite else "  <-- NOT FINITE/ZERO"
             print(f"{desc.key():24} {cd:>3} {m.time_s * 1e6:>12.1f} "
-                  f"{m.n:>3}  {m.run_id}{flag}")
+                  f"{m.n:>3} {m.hangs:>5}  {m.run_id}{flag}")
             if not m.finite:
                 bad += 1
+    print(f"# hangs={measurer.hangs}")
     if bad:
         print(f"::error::measure-smoke: {bad} non-finite/zero timing(s)")
         return 1

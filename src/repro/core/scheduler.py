@@ -416,24 +416,32 @@ class ConcurrencyController:
         requests: Sequence[GemmRequest],
         sched: Schedule,
         interpret: bool | None = None,
+        force_ref: bool = False,
     ) -> List[jax.Array]:
         """Run a precomputed `Schedule` through the real kernels.
 
         Separated from `execute()` so the serving runtime can replay a
         plan-cache hit without paying the planning pass again."""
-        return execute_schedule(requests, sched, interpret=interpret)
+        return execute_schedule(requests, sched, interpret=interpret,
+                                force_ref=force_ref)
 
 
 def execute_schedule(
     requests: Sequence[GemmRequest],
     sched: Schedule,
     interpret: bool | None = None,
+    force_ref: bool = False,
 ) -> List[jax.Array]:
     """Run a `Schedule` through the real kernels — the controller-free
     execution core behind `ConcurrencyController.execute_plan`.  Module-
     level so the measurement harness (`core/measure.py`, DESIGN.md §16)
     times launches through the *same* family adapters and launch shapes
-    the scheduler dispatches."""
+    the scheduler dispatches.
+
+    ``force_ref=True`` pins every member to its family's XLA reference
+    path — the trusted floor of the runtime's fallback ladder
+    (DESIGN.md §18.2): no pallas, no GO tiles, numerics the reference
+    implementations define."""
     outs: List[Optional[jax.Array]] = [None] * len(requests)
     for gp in sched.groups:
         reqs = [requests[i] for i in gp.indices]
@@ -445,19 +453,22 @@ def execute_schedule(
             # sequential member loop while latency is modeled.
             tiles = gp.tiles or [gp.tile] * len(gp.indices)
             for tile, i in zip(tiles, gp.indices):
-                outs[i] = _run_op(requests[i], tile, interpret)
+                outs[i] = _run_op(requests[i], tile, interpret,
+                                  force_ref=force_ref)
         elif gp.mode == "single" and family_of(reqs[0].desc) != "gemm":
-            outs[gp.indices[0]] = _run_op(reqs[0], gp.tile, interpret)
+            outs[gp.indices[0]] = _run_op(reqs[0], gp.tile, interpret,
+                                          force_ref=force_ref)
         elif gp.mode == "single" or len(reqs) == 1:
             r = reqs[0]
             outs[gp.indices[0]] = gemm(
                 r.a, r.b, ta=r.desc.ta, tb=r.desc.tb, tile=gp.tile,
-                interpret=interpret,
+                interpret=interpret, force_ref=force_ref,
             )
         elif gp.mode == "grouped":
             a = jnp.stack([_as_mk(r) for r in reqs])
             b = jnp.stack([_as_kn(r) for r in reqs])
-            res = grouped_gemm(a, b, tile=gp.tile, interpret=interpret)
+            res = grouped_gemm(a, b, tile=gp.tile, interpret=interpret,
+                               force_ref=force_ref)
             for j, i in enumerate(gp.indices):
                 outs[i] = res[j]
         else:  # ragged
@@ -474,7 +485,7 @@ def execute_schedule(
             b = jnp.stack([_as_kn(r) for r in reqs])
             res = ragged_gemm(
                 a, b, jnp.asarray(sizes, jnp.int32), tile=gp.tile,
-                interpret=interpret,
+                interpret=interpret, force_ref=force_ref,
             )
             off = 0
             for j, i in enumerate(gp.indices):
@@ -491,7 +502,8 @@ def _as_kn(r: GemmRequest) -> jax.Array:
     return r.b.T if r.desc.tb else r.b
 
 
-def _run_op(r: GemmRequest, tile: TileConfig, interpret: bool | None):
+def _run_op(r: GemmRequest, tile: TileConfig, interpret: bool | None,
+            force_ref: bool = False):
     """Execute one member of a mixed group through its family op (§14).
 
     Returns None when the request carries no operands (shadow dispatch).
@@ -503,22 +515,22 @@ def _run_op(r: GemmRequest, tile: TileConfig, interpret: bool | None):
         if r.a is None or r.b is None:
             return None
         return gemm(r.a, r.b, ta=r.desc.ta, tb=r.desc.tb, tile=tile,
-                    interpret=interpret)
+                    interpret=interpret, force_ref=force_ref)
     if r.inputs is None:
         return None
     if fam == "flash_attention":
         from repro.kernels.flash_attention.ops import attention_for_desc
 
         return attention_for_desc(r.desc, *r.inputs, tile=tile,
-                                  interpret=interpret)
+                                  interpret=interpret, force_ref=force_ref)
     if fam == "grouped_gemm":
         from repro.kernels.grouped_gemm.ops import grouped_for_desc
 
         return grouped_for_desc(r.desc, *r.inputs, tile=tile,
-                                interpret=interpret)
+                                interpret=interpret, force_ref=force_ref)
     if fam == "mamba_scan":
         from repro.kernels.mamba_scan.ops import scan_for_desc
 
         return scan_for_desc(r.desc, *r.inputs, tile=tile,
-                             interpret=interpret)
+                             interpret=interpret, force_ref=force_ref)
     raise ValueError(f"unknown op family: {fam}")

@@ -80,6 +80,7 @@ def flash_attention(
 
 def attention_for_desc(
     desc, q, k, v, *, tile=None, interpret: bool | None = None,
+    force_ref: bool = False,
 ):
     """Execute the launch an `AttentionDesc` describes (DESIGN.md §14).
 
@@ -93,5 +94,5 @@ def attention_for_desc(
               "bkv": max(128, min(tile.bn, 512))}
     return flash_attention(
         q, k, v, causal=desc.causal, q_offset=desc.Skv - desc.Sq,
-        interpret=interpret, **kw,
+        interpret=interpret, force_ref=force_ref, **kw,
     )

@@ -92,6 +92,7 @@ def ragged_gemm(
 
 def grouped_for_desc(
     desc, a, b, *, tile=None, interpret: bool | None = None,
+    force_ref: bool = False,
 ):
     """Execute the ragged expert-pool launch a `GroupedGemmDesc`
     describes (DESIGN.md §14).
@@ -104,7 +105,10 @@ def grouped_for_desc(
     tile = tile or TileConfig()
     sizes = desc.row_vector()
     interp = bool(interpret)
-    if not (use_pallas() or interp):
+    if force_ref or not (use_pallas() or interp):
+        # Reference path consumes the raw ragged layout — no bm
+        # re-packing, so the fallback ladder's reference rung never
+        # depends on a (possibly quarantined) tile.
         return ragged_gemm_ref(
             a, b, jnp.asarray(sizes, jnp.int32), out_dtype=a.dtype)
     bm = tile.bm

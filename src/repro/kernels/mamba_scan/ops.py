@@ -84,6 +84,7 @@ def ssd_scan(
 
 def scan_for_desc(
     desc, xd, da, Bm, Cm, *, tile=None, interpret: bool | None = None,
+    force_ref: bool = False,
 ):
     """Execute the SSD-scan launch a `ScanDesc` describes (DESIGN.md §14).
 
@@ -92,7 +93,8 @@ def scan_for_desc(
     clamped to the padded sequence so a decode step (T = 1) stays a
     single-chunk launch."""
     chunk = 128 if tile is None else max(8, min(int(tile.bm), 512))
-    y, _ = ssd_scan(xd, da, Bm, Cm, chunk=chunk, interpret=interpret)
+    y, _ = ssd_scan(xd, da, Bm, Cm, chunk=chunk, interpret=interpret,
+                    force_ref=force_ref)
     return y
 
 

@@ -4,6 +4,15 @@ Multi-tenant admission queue + plan cache around the dynamic concurrency
 logic of `repro.core.scheduler`, with telemetry and arrival traces for
 closed-loop replay.  See `benchmarks/serving.py` for the end-to-end loop.
 """
+from repro.runtime.faults import (
+    CircuitBreaker,
+    FaultInjector,
+    FaultRule,
+    InjectedFault,
+    LaunchFault,
+    LaunchStall,
+    NonFiniteOutput,
+)
 from repro.runtime.integration import (
     decode_step_descs,
     decode_step_op_descs,
@@ -32,6 +41,8 @@ from repro.runtime.traces import (
 __all__ = [
     "Launch", "Runtime", "RuntimeConfig", "Ticket", "GroupRecord",
     "Telemetry", "MIXED_CLASS", "TenantSLO", "DEFAULT_SLO",
+    "CircuitBreaker", "FaultInjector", "FaultRule", "InjectedFault",
+    "LaunchFault", "LaunchStall", "NonFiniteOutput",
     "adversarial_trace", "bursty_trace", "poisson_trace",
     "uniform_trace", "decode_step_descs", "decode_step_op_descs",
     "decode_step_requests", "prewarm_decode", "submit_decode_bundle",

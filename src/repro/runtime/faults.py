@@ -1,0 +1,273 @@
+"""Deterministic fault injection + circuit breaking — DESIGN.md §18.
+
+GOLDYLOC's dynamic logic picks GO-kernels from runtime conditions, but a
+shared-cloud server also has to survive the kernels it picked: flaky
+pallas launches, non-finite outputs from a bad tile, launches that hang.
+This module supplies the two fault-tolerance primitives the runtime's
+fallback ladder (`Runtime._execute`, §18.2) is built on:
+
+- `FaultInjector` — a seed-keyed chaos layer that wraps
+  `core.scheduler.execute_schedule` and makes a *deterministic* subset
+  of launches raise, return NaN, or stall.  Decisions are pure
+  functions of ``(seed, rule, scope, ordinal)`` where scope is the
+  (family, compat-class, tile-key) triple of the launch — the same
+  trace with the same seed always faults the same launches, so chaos
+  runs are replayable and the hypothesis reconciliation tests can
+  audit every injected event against the telemetry counters.
+- `CircuitBreaker` — per-(family, class, tile-key) consecutive-failure
+  counters with quarantine-after-K-strikes and half-open probes after a
+  cooldown (§18.3).  Time is injectable (the runtime feeds its modeled
+  timeline), so breaker behaviour is deterministic in replay too.
+
+Nothing here touches the device: injection wraps the executor callable
+and the breaker is plain bookkeeping, so with no injector configured
+the runtime's execution path is bitwise-identical to the unhardened
+one.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.op_desc import family_of
+from repro.core.scheduler import compat_key, execute_schedule
+
+
+class LaunchFault(RuntimeError):
+    """Base class for the failures the fallback ladder handles."""
+
+
+class InjectedFault(LaunchFault):
+    """A launch the `FaultInjector` decided should raise."""
+
+
+class LaunchStall(LaunchFault):
+    """A launch that exceeded its (simulated) deadline — the injector's
+    stand-in for a hung kernel, surfaced after advancing the injectable
+    clock by the stall duration."""
+
+
+class NonFiniteOutput(LaunchFault):
+    """A launch that completed but produced NaN/Inf — detected by the
+    runtime's output guard, whether injected or genuine."""
+
+
+def fault_kind(exc: BaseException) -> str:
+    """Telemetry bucket for one failure — injected kinds keep their
+    names; anything else (a genuine kernel error) is ``"error"``."""
+    if isinstance(exc, LaunchStall):
+        return "stall"
+    if isinstance(exc, NonFiniteOutput):
+        return "nan"
+    if isinstance(exc, InjectedFault):
+        return "raise"
+    return "error"
+
+
+@dataclass(frozen=True)
+class FaultRule:
+    """One chaos rule: fault probability ``p`` for launches matching the
+    scope filters (``None`` matches anything).  ``kind`` is "raise",
+    "nan", or "stall"; ``max_faults`` caps deliveries so a test can make
+    exactly the first matching launch fail and nothing after it."""
+
+    kind: str                       # "raise" | "nan" | "stall"
+    p: float
+    family: Optional[str] = None
+    class_key: Optional[str] = None
+    tile_key: Optional[str] = None
+    stall_s: float = 2e-3
+    max_faults: Optional[int] = None
+
+    def matches(self, family: str, class_key: str, tile_key: str) -> bool:
+        return ((self.family is None or self.family == family)
+                and (self.class_key is None or self.class_key == class_key)
+                and (self.tile_key is None or self.tile_key == tile_key))
+
+
+@dataclass(frozen=True)
+class Injection:
+    """One delivered fault — the audit record reconciliation tests match
+    against `Telemetry.faults`."""
+
+    kind: str
+    family: str
+    class_key: str
+    tile_key: str
+    ordinal: int                    # per-scope attempt counter at delivery
+
+
+def _roll(seed: int, kind: str, scope: str, ordinal: int) -> float:
+    """Uniform [0, 1) as a pure function of the decision coordinates —
+    sha1, not `random`, so rolls are stable across platforms/runs."""
+    blob = f"{seed}|{kind}|{scope}|{ordinal}".encode()
+    return int.from_bytes(hashlib.sha1(blob).digest()[:8], "big") / 2.0 ** 64
+
+
+@dataclass
+class FaultInjector:
+    """Seed-keyed chaos layer over the executor (DESIGN.md §18.1).
+
+    ``wrap(execute)`` returns a drop-in replacement for
+    `execute_schedule` that rolls each group (each *member* for mixed
+    groups, which carry per-member tiles) against the rules before
+    executing.  "raise"/"stall" abort the launch before the kernels
+    run; "nan" lets it run and then poisons the matched outputs —
+    exactly the failure the runtime's finiteness guard must catch.
+    ``advance`` is the injectable-clock hook (cf. `core.measure`): a
+    stall calls ``advance(stall_s)`` so virtual-clock harnesses observe
+    the lost time without sleeping.
+
+    Reference-path executions (``force_ref=True``) are never injected:
+    the sequential per-op reference rung is the ladder's trusted floor.
+    """
+
+    rules: Sequence[FaultRule] = ()
+    seed: int = 0
+    advance: Optional[Callable[[float], None]] = None
+    log: List[Injection] = field(default_factory=list)
+    _ordinals: Dict[str, int] = field(default_factory=dict)
+    _fired: Dict[int, int] = field(default_factory=dict)
+
+    @property
+    def enabled(self) -> bool:
+        return any(r.p > 0.0 for r in self.rules)
+
+    # ---------------------------------------------------------- decisions
+    def decide(self, family: str, class_key: str, tile_key: str
+               ) -> Optional[FaultRule]:
+        """Roll one launch attempt against the rules; first match wins.
+        Each scope keeps its own attempt ordinal, so retries of the same
+        (class, tile) re-roll rather than replaying the same decision."""
+        scope = f"{family}|{class_key}|{tile_key}"
+        ordinal = self._ordinals.get(scope, 0)
+        self._ordinals[scope] = ordinal + 1
+        for idx, rule in enumerate(self.rules):
+            if rule.p <= 0.0 or not rule.matches(family, class_key, tile_key):
+                continue
+            if (rule.max_faults is not None
+                    and self._fired.get(idx, 0) >= rule.max_faults):
+                continue
+            if _roll(self.seed, rule.kind, scope, ordinal) < rule.p:
+                self._fired[idx] = self._fired.get(idx, 0) + 1
+                self.log.append(Injection(
+                    kind=rule.kind, family=family, class_key=class_key,
+                    tile_key=tile_key, ordinal=ordinal))
+                return rule
+        return None
+
+    def _deliver(self, rule: FaultRule, poison: List[int],
+                 targets: Sequence[int]) -> None:
+        if rule.kind == "raise":
+            raise InjectedFault("injected launch failure")
+        if rule.kind == "stall":
+            if self.advance is not None:
+                self.advance(rule.stall_s)
+            raise LaunchStall(
+                f"injected stall exceeded deadline ({rule.stall_s:g}s)")
+        poison.extend(targets)      # "nan": poison after execution
+
+    # -------------------------------------------------------------- wrap
+    def wrap(self, execute: Callable = execute_schedule) -> Callable:
+        """Chaos-wrapped executor with `execute_schedule`'s signature
+        plus ``force_ref`` (forwarded; also the injection bypass)."""
+        import jax.numpy as jnp
+
+        def run(requests, sched, interpret=None, force_ref=False):
+            if force_ref or not self.enabled:
+                return execute(requests, sched, interpret=interpret,
+                               force_ref=force_ref)
+            poison: List[int] = []
+            for gp in sched.groups:
+                if gp.mode == "mixed":
+                    tiles = gp.tiles or [gp.tile] * len(gp.indices)
+                    for tile, i in zip(tiles, gp.indices):
+                        d = requests[i].desc
+                        rule = self.decide(family_of(d), compat_key(d),
+                                           tile.key())
+                        if rule is not None:
+                            self._deliver(rule, poison, [i])
+                else:
+                    d = requests[gp.indices[0]].desc
+                    rule = self.decide(family_of(d), compat_key(d),
+                                       gp.tile.key())
+                    if rule is not None:
+                        self._deliver(rule, poison, gp.indices)
+            outs = execute(requests, sched, interpret=interpret,
+                           force_ref=force_ref)
+            for i in poison:
+                if outs[i] is not None:
+                    outs[i] = jnp.full_like(outs[i], jnp.nan)
+            return outs
+
+        return run
+
+
+@dataclass
+class _TileHealth:
+    strikes: int = 0
+    quarantined_at: Optional[float] = None
+    half_open: bool = False
+
+
+class CircuitBreaker:
+    """Per-(family, compat-class, tile-key) quarantine — DESIGN.md §18.3.
+
+    ``strike`` counts *consecutive* failures (a success on a healthy
+    tile resets its counter); the K-th strike quarantines the tile and
+    returns True exactly once so the caller can run the eviction side
+    effects (library quarantine + plan/memo invalidation) exactly once.
+    ``release_due`` implements the half-open probe: after ``cooldown_s``
+    the tile is released with ``K - 1`` residual strikes, so the next
+    failure re-quarantines immediately while a success clears it."""
+
+    def __init__(self, strikes: int = 3, cooldown_s: float = 0.5):
+        self.strikes = max(1, int(strikes))
+        self.cooldown_s = float(cooldown_s)
+        self._state: Dict[Tuple[str, str, str], _TileHealth] = {}
+        self.quarantine_count = 0
+
+    @property
+    def active(self) -> bool:
+        return bool(self._state)
+
+    def strike(self, family: str, class_key: str, tile_key: str,
+               now: float) -> bool:
+        key = (family, class_key, tile_key)
+        st = self._state.setdefault(key, _TileHealth())
+        if st.quarantined_at is not None:
+            return False            # already out — side effects ran
+        st.strikes += 1
+        if st.strikes >= self.strikes:
+            st.quarantined_at = now
+            self.quarantine_count += 1
+            return True
+        return False
+
+    def succeed(self, family: str, class_key: str, tile_key: str) -> None:
+        st = self._state.get((family, class_key, tile_key))
+        if st is not None and st.quarantined_at is None:
+            del self._state[(family, class_key, tile_key)]
+
+    def is_quarantined(self, family: str, class_key: str,
+                       tile_key: str) -> bool:
+        st = self._state.get((family, class_key, tile_key))
+        return st is not None and st.quarantined_at is not None
+
+    def quarantined(self) -> List[Tuple[str, str, str]]:
+        return sorted(k for k, st in self._state.items()
+                      if st.quarantined_at is not None)
+
+    def release_due(self, now: float) -> List[Tuple[str, str, str]]:
+        """Quarantined tiles whose cooldown elapsed, flipped to the
+        half-open probation state (one more failure re-quarantines)."""
+        out: List[Tuple[str, str, str]] = []
+        for key, st in sorted(self._state.items()):
+            if (st.quarantined_at is not None
+                    and now - st.quarantined_at >= self.cooldown_s):
+                st.quarantined_at = None
+                st.strikes = self.strikes - 1
+                st.half_open = True
+                out.append(key)
+        return out

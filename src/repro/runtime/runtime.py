@@ -38,6 +38,8 @@ from collections import OrderedDict
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax.numpy as jnp
+
 from repro.core.cost_model import (
     EVAL_COUNTER,
     SLICE_OVERHEAD_S,
@@ -52,6 +54,13 @@ from repro.core.scheduler import (
     GroupPlan,
     Schedule,
     compat_key,
+    execute_schedule,
+)
+from repro.runtime.faults import (
+    CircuitBreaker,
+    FaultInjector,
+    NonFiniteOutput,
+    fault_kind,
 )
 from repro.runtime.telemetry import GroupRecord, Telemetry
 
@@ -79,6 +88,11 @@ class RuntimeConfig:
     flush_budget_s: float | None = None  # bind ≤ this much modeled work/flush
     slice_budget_frac: float = 0.5  # slice when iso time > budget * frac
     max_slices: int = 8             # admission never slices finer than this
+    # Fault tolerance (DESIGN.md §18).  The defaults change nothing on
+    # the healthy path: the ladder only engages when an attempt fails.
+    max_retries: int = 1            # same-plan retries before re-planning
+    quarantine_strikes: int = 3     # consecutive failures → quarantine
+    quarantine_cooldown_s: float = 0.5   # then half-open probe (§18.3)
 
 
 @dataclass(frozen=True)
@@ -148,6 +162,10 @@ class Launch:
     cache_hit: bool
     start_t: float = 0.0
     end_t: float = 0.0
+    # §18.2 outcome: which rung completed the launch (None = planned)
+    # and the modeled device time the failed attempts consumed.
+    fallback: Optional[str] = None
+    penalty_s: float = 0.0
 
 
 class _ClassQueue:
@@ -203,11 +221,24 @@ class Runtime:
         config: RuntimeConfig | None = None,
         telemetry: Telemetry | None = None,
         clock=time.monotonic,
+        fault_injector: FaultInjector | None = None,
     ):
         self.ctrl = controller or ConcurrencyController()
         self.config = config or RuntimeConfig()
         self.telemetry = telemetry or Telemetry()
         self.clock = clock
+        # §18: chaos layer (None in production → the executor is the
+        # plain module function, bitwise-identical dispatch) and the
+        # per-(family, class, tile) circuit breaker.  Breaker time runs
+        # on the modeled launch timeline, so quarantine/cooldown behave
+        # identically in virtual-clock replay and live serving.
+        self.fault_injector = fault_injector
+        self._exec_fn = (fault_injector.wrap(execute_schedule)
+                         if fault_injector is not None else execute_schedule)
+        self.breaker = CircuitBreaker(
+            strikes=self.config.quarantine_strikes,
+            cooldown_s=self.config.quarantine_cooldown_s)
+        self._quarantined_descs: Dict[Tuple[str, str, str], List[str]] = {}
         self.available = self.ctrl.max_cd
         # unscaled chip state, so set_mesh re-derives and never compounds
         self._chip_spec = self.ctrl.spec
@@ -580,9 +611,13 @@ class Runtime:
         t = base
         for launch in launches:
             launch.start_t = t
-            t += _launch_cost(launch)
-            launch.end_t = t
             achieved = self._execute(launch) if self.config.execute else None
+            # Fallback attempts consume modeled device time too (§18.2):
+            # `penalty_s` stays 0.0 whenever the planned schedule
+            # succeeded, so the healthy timeline is bitwise-identical to
+            # the unhardened one.
+            t += _launch_cost(launch) + launch.penalty_s
+            launch.end_t = t
             for ticket in launch.tickets:
                 ticket.done_t = launch.end_t
                 ticket.plan = launch.plan
@@ -601,6 +636,7 @@ class Runtime:
                 modeled_time_s=launch.plan.modeled_time_s,
                 achieved_time_s=achieved,
                 cache_hit=launch.cache_hit,
+                fallback=launch.fallback,
             ))
             self._feed_calibration(launch, achieved)
         if launches:
@@ -668,7 +704,11 @@ class Runtime:
             if len(descs) >= 4 and tk.desc.key() not in descs:
                 continue
             descs[tk.desc.key()] = tk.desc
-        if achieved is None:
+        if achieved is None or launch.fallback is not None:
+            # A fallback launch's wall clock timed the whole ladder, not
+            # the planned kernel — feeding it would teach the calibrator
+            # that healthy plans are slow (§18.2).  (`cal.update` also
+            # rejects non-finite times as a second line of defense.)
             return
         cal.update(family_of(launch.tickets[0].desc), launch.class_key,
                    launch.plan.modeled_time_s, achieved)
@@ -688,26 +728,43 @@ class Runtime:
     def pending_retunes(self) -> int:
         return len(self._retune)
 
-    def process_retunes(self) -> int:
+    def process_retunes(self, now: float | None = None) -> int:
         """Run the queued drift re-tunes (the "background" half of §16 —
         callers invoke this between traffic, never inside flush):
         invalidate the stale classes' library entries, re-tune them in
         one `GOLibrary.prewarm` sweep, and drop every plan/memo derived
         from the stale entries.  Returns the number of re-tuned
-        entries."""
-        if not self._retune:
-            return 0
-        descs: Dict[str, GemmDesc] = {}
-        for _, ck in self._retune:
-            descs.update(self._class_descs.get(ck, {}))
-        self._retune.clear()
-        if not descs:
-            return 0
-        self.ctrl.lib.invalidate(list(descs))
-        fresh = self.ctrl.lib.prewarm(list(descs.values()))
-        self.ctrl.invalidate_caches()
-        self.invalidate_plans()
-        self._iso_cache.clear()
+        entries.
+
+        Also the half-open probe point (§18.3): quarantines whose
+        cooldown elapsed by ``now`` (modeled-timeline seconds; defaults
+        to the wall clock) are released — the banned tile re-enters the
+        tuner's candidate set and one more failure re-quarantines it
+        immediately, while a success clears the breaker."""
+        fresh = 0
+        if self._retune:
+            descs: Dict[str, GemmDesc] = {}
+            for _, ck in self._retune:
+                descs.update(self._class_descs.get(ck, {}))
+            self._retune.clear()
+            if descs:
+                self.ctrl.lib.invalidate(list(descs))
+                fresh = self.ctrl.lib.prewarm(list(descs.values()))
+                self.ctrl.invalidate_caches()
+                self.invalidate_plans()
+                self._iso_cache.clear()
+        if self.breaker.active:
+            now = self.clock() if now is None else now
+            for key in self.breaker.release_due(now):
+                keys = self._quarantined_descs.pop(key, [])
+                _family, _class_key, tile_key = key
+                self.ctrl.lib.release(keys, tile_key)
+                if keys:
+                    self.ctrl.lib.invalidate(keys)
+                self.ctrl.invalidate_caches()
+                self.invalidate_plans()
+                self._iso_cache.clear()
+                self.telemetry.record_probe()
         return fresh
 
     # ---------------------------------------------------------- internals
@@ -762,14 +819,136 @@ class Runtime:
         mini = Schedule(groups=[replace(
             launch.plan, indices=list(range(len(reqs))))])
         t0 = time.perf_counter()
-        outs = self.ctrl.execute_plan(
-            reqs, mini, interpret=self.config.interpret)
-        for o in outs:
-            o.block_until_ready()
+        outs = self._execute_resilient(reqs, mini, launch)
         achieved = time.perf_counter() - t0
         for ticket, out in zip(launch.tickets, outs):
             ticket.result = out
         return achieved
+
+    # -------------------------------------------- fallback ladder (§18.2)
+    def _execute_resilient(self, reqs, mini: Schedule, launch: Launch):
+        """Run one bound launch down the fallback ladder until it
+        completes: planned schedule → ``max_retries`` same-plan retries
+        → the group re-planned on the legacy/isolated tiles → sequential
+        per-op reference execution (``force_ref``, never injected, no
+        finiteness veto — it IS the correctness oracle).  Every failed
+        attempt strikes the (family, class, tile) triples it used; the
+        K-th consecutive strike quarantines the GO entry (§18.3).  Each
+        failed attempt charges one ``modeled_time_s`` of penalty onto
+        the launch's modeled timeline."""
+        plan = launch.plan
+        n = len(reqs)
+        planned_tiles = (plan.tiles if plan.mode == "mixed" and plan.tiles
+                         else [plan.tile] * n)
+
+        def legacy() -> tuple[Schedule, List]:
+            iso = [self.ctrl.lib.get(r.desc).isolated for r in reqs]
+            gp = replace(
+                plan, indices=list(range(n)), tile=iso[0],
+                tiles=iso if plan.mode == "mixed" else None)
+            return Schedule(groups=[gp]), iso
+
+        def reference() -> Schedule:
+            return Schedule(groups=[
+                GroupPlan(indices=[i], cd=1, tile=plan.tile, mode="single",
+                          modeled_time_s=0.0)
+                for i in range(n)])
+
+        rungs = (["planned"]
+                 + ["retry"] * max(0, int(self.config.max_retries))
+                 + ["legacy", "reference"])
+        failures = 0
+        for rung in rungs:
+            if rung in ("planned", "retry"):
+                sched, tiles, force_ref = mini, planned_tiles, False
+            elif rung == "legacy":
+                sched, tiles = legacy()
+                force_ref = False
+            else:
+                sched, tiles, force_ref = reference(), None, True
+            try:
+                outs = self._attempt(reqs, sched, force_ref)
+            except Exception as exc:  # noqa: BLE001 — the ladder IS the handler
+                self.telemetry.record_fault(fault_kind(exc))
+                failures += 1
+                if tiles is not None:
+                    self._strike(reqs, tiles, now=launch.start_t)
+                if rung == "reference":
+                    # Nothing left to degrade to — a reference failure is
+                    # a genuine bug, not a bad GO pick.  Surface it.
+                    raise
+                continue
+            if rung != "planned":
+                launch.fallback = rung
+                launch.penalty_s = failures * plan.modeled_time_s
+                self.telemetry.record_fallback(rung)
+            elif self.breaker.active:
+                # Healthy launch on a watched tile: consecutive-failure
+                # counters reset (guarded so the no-fault path does zero
+                # extra work).
+                for r, tile in zip(reqs, planned_tiles):
+                    self.breaker.succeed(family_of(r.desc),
+                                         compat_key(r.desc), tile.key())
+            return outs
+        raise AssertionError("unreachable: reference rung returns or raises")
+
+    def _attempt(self, reqs, sched: Schedule, force_ref: bool):
+        """One ladder attempt: execute (through the chaos wrapper when
+        injecting), synchronize, and veto non-finite outputs — except on
+        the reference rung, whose numerics are trusted by definition."""
+        outs = self._exec_fn(reqs, sched, interpret=self.config.interpret,
+                             force_ref=force_ref)
+        for o in outs:
+            o.block_until_ready()
+        if not force_ref:
+            for o in outs:
+                if not bool(jnp.isfinite(o).all()):
+                    raise NonFiniteOutput("launch produced non-finite output")
+        return outs
+
+    def _strike(self, reqs, tiles, now: float) -> None:
+        """Charge one failed attempt to every distinct (family, class,
+        tile) it used; quarantine the ones that hit K strikes."""
+        targets: Dict[Tuple[str, str, str], set] = {}
+        for r, tile in zip(reqs, tiles):
+            key = (family_of(r.desc), compat_key(r.desc), tile.key())
+            targets.setdefault(key, set()).add(r.desc.key())
+        for (fam, ck, tk), desc_keys in targets.items():
+            if self.breaker.strike(fam, ck, tk, now):
+                self._quarantine_entry(fam, ck, tk, desc_keys)
+
+    def _quarantine_entry(self, family: str, class_key: str, tile_key: str,
+                          desc_keys) -> None:
+        """K-th strike side effects (§18.3), run exactly once per
+        quarantine: ban the tile in the library, drop the tuned entries
+        (the re-tune sees the ban), evict every cached plan that
+        resolved to the tile, and clear the controller/admission memos
+        derived from the now-stale entries."""
+        keys = sorted(desc_keys)
+        self._quarantined_descs[(family, class_key, tile_key)] = keys
+        self.ctrl.lib.quarantine(keys, tile_key)
+        self.ctrl.lib.invalidate(keys)
+        evicted = self._evict_plans_using(tile_key)
+        self.ctrl.invalidate_caches()
+        self._iso_cache.clear()
+        self.telemetry.record_quarantine(evicted_plans=evicted)
+
+    def _evict_plans_using(self, tile_key: str) -> int:
+        """Plan-cache hygiene (§18.3): drop every cached schedule that
+        resolved any group (or mixed-group member) to ``tile_key`` — a
+        poisoned plan must not be replayable from a cache hit.  Same
+        invalidation contract as `set_mesh`, scoped to one tile."""
+        doomed = [
+            sig for sig, sched in self._plan_cache.items()
+            if any(
+                gp.tile.key() == tile_key
+                or (gp.tiles is not None
+                    and any(t.key() == tile_key for t in gp.tiles))
+                for gp in sched.groups)
+        ]
+        for sig in doomed:
+            del self._plan_cache[sig]
+        return len(doomed)
 
     def invalidate_plans(self) -> None:
         self._plan_cache.clear()

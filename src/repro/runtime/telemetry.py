@@ -29,6 +29,9 @@ class GroupRecord:
     modeled_time_s: float
     achieved_time_s: Optional[float] = None   # wall clock when executed
     cache_hit: bool = False
+    # Which fallback rung completed the launch (§18.2): None for the
+    # planned schedule, else "retry" | "legacy" | "reference".
+    fallback: Optional[str] = None
 
     @property
     def model_error(self) -> Optional[float]:
@@ -70,6 +73,16 @@ class Telemetry:
     slice_counts: Counter = field(default_factory=Counter)
     sliced_ops: int = 0
     deferred_launches: int = 0
+    # Fault-tolerance accounting (DESIGN.md §18): failed launch attempts
+    # by kind ("raise" | "nan" | "stall" | "error"), successful fallback
+    # completions by rung, quarantine/probe events, and cached plans
+    # evicted by quarantines.  These reconcile with the FaultInjector's
+    # audit log (property-tested in tests/test_chaos.py).
+    faults: Counter = field(default_factory=Counter)
+    fallbacks: Counter = field(default_factory=Counter)
+    quarantines: int = 0
+    quarantine_evictions: int = 0
+    probes: int = 0
 
     # ------------------------------------------------------------- record
     def record_submit(self, n: int = 1) -> None:
@@ -126,6 +139,32 @@ class Telemetry:
         """Launches pushed past a flush budget to the next flush (§17.3)."""
         self.deferred_launches += n
 
+    def record_fault(self, kind: str) -> None:
+        """One failed launch attempt (§18.2) — before any fallback."""
+        self.faults[kind] += 1
+
+    def record_fallback(self, rung: str) -> None:
+        """One launch completed by the given fallback rung (§18.2)."""
+        self.fallbacks[rung] += 1
+
+    def record_quarantine(self, evicted_plans: int = 0) -> None:
+        """The circuit breaker quarantined one (family, class, tile)
+        (§18.3), evicting ``evicted_plans`` cached plans."""
+        self.quarantines += 1
+        self.quarantine_evictions += evicted_plans
+
+    def record_probe(self, n: int = 1) -> None:
+        """Half-open probes: quarantines released after cooldown (§18.3)."""
+        self.probes += n
+
+    @property
+    def fault_events(self) -> int:
+        return sum(self.faults.values())
+
+    @property
+    def fallback_events(self) -> int:
+        return sum(self.fallbacks.values())
+
     # ------------------------------------------------------------ derive
     def cache_hit_rate(self) -> float:
         total = self.cache_hits + self.cache_misses
@@ -178,7 +217,9 @@ class Telemetry:
         acc: Dict[str, List[float]] = {}
         for g in self.groups:
             r = g.model_error
-            if r is not None and r > 0:
+            # Non-finite ratios (hung/faulted launches, §18) carry no
+            # calibration signal and would poison every aggregate.
+            if r is not None and r > 0 and math.isfinite(r):
                 acc.setdefault(g.class_key, []).append(math.log(r))
         return {
             k: {
@@ -233,6 +274,11 @@ class Telemetry:
             "slice_counts": dict(self.slice_counts),
             "sliced_ops": self.sliced_ops,
             "deferred_launches": self.deferred_launches,
+            "faults": dict(self.faults),
+            "fallbacks": dict(self.fallbacks),
+            "quarantines": self.quarantines,
+            "quarantine_evictions": self.quarantine_evictions,
+            "probes": self.probes,
         }
 
 

@@ -1,0 +1,155 @@
+"""Crash-safe GO-library loading + quarantine filtering — DESIGN.md §18.4.
+
+A corrupt/truncated/wrong-type on-disk blob is the startup equivalent of
+a bad kernel: the library must warn and boot EMPTY (entries re-tune
+lazily, the next save rewrites the file) instead of taking the server
+down with an exception.  The quarantine half (§18.3) is the library-side
+contract the circuit breaker relies on: a banned tile can never come
+back out of `get`, but lifting the ban restores the entry bitwise.
+Schema roundtrip/migration behaviour lives in tests/test_core_tuner.py.
+"""
+import json
+
+import pytest
+
+from repro.core import GemmDesc, GOLibrary
+from repro.core.library import SCHEMA_VERSION
+from repro.core.tuner import GOEntry
+from repro.kernels.gemm.ops import TileConfig
+
+D = GemmDesc(256, 512, 512, dtype="f32")
+
+ISO = TileConfig(128, 128, 128)
+GO2 = TileConfig(64, 256, 128)          # distinct GO pick for CD=2
+
+
+def _entry(key: str) -> GOEntry:
+    return GOEntry(desc_key=key, isolated=ISO, go={1: ISO, 2: GO2},
+                   speedup={2: 1.4}, family="gemm")
+
+
+def _good_blob(key: str = "k") -> dict:
+    return {
+        "schema": SCHEMA_VERSION,
+        "entries": {key: {
+            "family": "gemm",
+            "isolated": [128, 128, 128, 1, 0],
+            "go": {"1": [128, 128, 128, 1, 0], "2": [64, 256, 128, 1, 0]},
+            "rc_source": {},
+            "speedup": {"2": 1.4},
+        }},
+    }
+
+
+# ------------------------------------------------------ crash-safe load
+def test_load_truncated_file_warns_and_starts_empty(tmp_path):
+    p = tmp_path / "lib.json"
+    # A crash mid-write leaves a prefix of the real blob: valid UTF-8,
+    # invalid JSON.
+    p.write_text(json.dumps(_good_blob())[:40])
+    lib = GOLibrary()
+    with pytest.warns(UserWarning, match="unusable"):
+        assert lib.load(p) == 0
+    assert len(lib) == 0 and lib.loaded_schema is None
+
+
+def test_load_corrupt_json_warns_and_starts_empty(tmp_path):
+    p = tmp_path / "lib.json"
+    p.write_text("{not json at all!")
+    with pytest.warns(UserWarning, match="unusable"):
+        assert GOLibrary(path=p).loaded_schema is None
+
+
+def test_load_non_dict_blob_warns_and_starts_empty(tmp_path):
+    p = tmp_path / "lib.json"
+    p.write_text(json.dumps(["not", "a", "mapping"]))   # wrong type
+    lib = GOLibrary()
+    with pytest.warns(UserWarning, match="expected mapping"):
+        assert lib.load(p) == 0
+    assert len(lib) == 0
+
+
+def test_load_non_dict_entries_warns_and_starts_empty(tmp_path):
+    p = tmp_path / "lib.json"
+    p.write_text(json.dumps({"schema": SCHEMA_VERSION, "entries": 7}))
+    lib = GOLibrary()
+    with pytest.warns(UserWarning, match="expected mapping"):
+        assert lib.load(p) == 0
+    assert len(lib) == 0
+
+
+def test_load_non_integer_schema_warns_and_starts_empty(tmp_path):
+    p = tmp_path / "lib.json"
+    p.write_text(json.dumps({"schema": "vX", "entries": {}}))
+    lib = GOLibrary()
+    with pytest.warns(UserWarning, match="non-integer schema"):
+        assert lib.load(p) == 0
+    assert lib.loaded_schema is None
+
+
+def test_load_skips_malformed_entries_keeps_good_ones(tmp_path):
+    blob = _good_blob("good")
+    blob["entries"]["bad1"] = {"go": {}}                # missing isolated
+    blob["entries"]["bad2"] = "not a record"
+    p = tmp_path / "lib.json"
+    p.write_text(json.dumps(blob))
+    lib = GOLibrary()
+    with pytest.warns(UserWarning, match="skipped 2 malformed"):
+        assert lib.load(p) == SCHEMA_VERSION
+    assert set(lib.entries()) == {"good"}
+    assert lib.entries()["good"].go[2] == TileConfig(64, 256, 128)
+
+
+def test_unusable_file_still_tunes_lazily(tmp_path):
+    p = tmp_path / "lib.json"
+    p.write_text("garbage")
+    with pytest.warns(UserWarning, match="unusable"):
+        lib = GOLibrary(path=p)
+    e = lib.get(D)                      # lazy re-tune works after the warn
+    assert e.desc_key == D.key() and len(lib) == 1
+
+
+# ------------------------------------------------------ quarantine (§18.3)
+def test_quarantined_tile_degrades_to_isolated_and_drops_speedup():
+    lib = GOLibrary()
+    key = D.key()
+    lib._entries[key] = _entry(key)
+    lib.quarantine([key], GO2.key())
+    e = lib.get(D)
+    assert e.go[2] == ISO               # banned GO pick → isolated tile
+    assert 2 not in e.speedup           # no stale >1 claim elects CD=2
+    assert e.preferred_cd() == 1
+    assert lib.quarantined() == {key: frozenset({GO2.key()})}
+
+
+def test_release_restores_entry_bitwise():
+    lib = GOLibrary()
+    key = D.key()
+    lib._entries[key] = _entry(key)
+    lib.quarantine([key], GO2.key())
+    lib.release([key], GO2.key())
+    assert lib.quarantined() == {}
+    e = lib.get(D)
+    assert e.go[2] == GO2 and e.speedup == {2: 1.4}
+
+
+def test_isolated_tile_is_never_quarantined_away():
+    lib = GOLibrary()
+    key = D.key()
+    lib._entries[key] = _entry(key)
+    lib.quarantine([key], ISO.key())    # breaker bans the isolated tile
+    e = lib.get(D)
+    assert e.isolated == ISO            # legacy rung still has a tile
+    assert e.go[1] == ISO               # substitution target IS isolated
+
+
+def test_quarantine_not_persisted_by_save(tmp_path):
+    p = tmp_path / "lib.json"
+    lib = GOLibrary()
+    key = D.key()
+    lib._entries[key] = _entry(key)
+    lib.quarantine([key], GO2.key())
+    lib.save(p)
+    lib2 = GOLibrary(path=p)
+    assert lib2.quarantined() == {}     # live-process state, not library
+    assert lib2.get(D).go[2] == GO2

@@ -7,6 +7,7 @@ timed through the SAME `execute_schedule` adapters the scheduler
 dispatches.  The clock is injectable, so the timing discipline is
 verified with scripted timestamps — no real sleeps, no flaky
 tolerances."""
+import math
 import numpy as np
 import pytest
 
@@ -180,3 +181,42 @@ def test_smoke_grid_deterministic_and_small():
     assert smoke_grid(4) == smoke_grid(4)
     assert len(smoke_grid(4)) == 4
     assert all(d.dtype == "f32" and d.batch == 1 for d in smoke_grid(8))
+
+
+# ------------------------------------------------------ watchdog (§18.4)
+def test_watchdog_flags_hung_sample_and_median_survives():
+    # One timed iteration "takes" 10 s against a 1 s deadline: the
+    # watchdog records it as inf, MAD rejection discards it, and the
+    # median comes from the healthy 1 ms repeats.
+    clk = ScriptedClock([1e-3, 1e-3, 1e-3, 10.0, 1e-3, 1e-3])
+    mzr = Measurer(warmup=1, repeats=5, clock=clk, deadline_s=1.0)
+    m = mzr.measure_group(GEMM, tune_gemm(GEMM).isolated, cd=1)
+    assert m.hangs == 1 and mzr.hangs == 1
+    assert m.time_s == pytest.approx(1e-3) and m.finite
+    assert not any(math.isinf(v) for v in m.samples)
+
+
+def test_watchdog_all_hung_yields_nonfinite_measurement():
+    clk = ScriptedClock([5.0, 5.0, 5.0, 5.0])
+    mzr = Measurer(warmup=1, repeats=3, clock=clk, deadline_s=1.0)
+    m = mzr.measure_group(GEMM, tune_gemm(GEMM).isolated, cd=1)
+    assert m.hangs == 3
+    assert math.isinf(m.time_s) and not m.finite
+
+
+def test_watchdog_hang_counter_accumulates_across_measurements():
+    clk = ScriptedClock([1e-3, 10.0, 1e-3, 1e-3,     # first: 1 hang
+                         1e-3, 1e-3, 10.0, 10.0])    # second: 2 hangs
+    mzr = Measurer(warmup=1, repeats=3, clock=clk, deadline_s=1.0)
+    assert mzr.measure_group(GEMM, tune_gemm(GEMM).isolated).hangs == 1
+    assert mzr.measure_group(GEMM, tune_gemm(GEMM).isolated).hangs == 2
+    assert mzr.hangs == 3
+
+
+def test_no_deadline_means_no_watchdog():
+    # Bitwise-compat default: without deadline_s even a wild sample is
+    # just an outlier, never an inf "hang".
+    clk = ScriptedClock([1e-3, 1e-3, 100.0, 1e-3, 1e-3])
+    mzr = Measurer(warmup=1, repeats=4, clock=clk)
+    m = mzr.measure_group(GEMM, tune_gemm(GEMM).isolated, cd=1)
+    assert m.hangs == 0 and mzr.hangs == 0 and m.finite
