@@ -19,10 +19,18 @@ the results against the XLA reference.
 
 ``--mixed-ops`` additionally replays the heterogeneous decode bundles of
 an MoE (MLA attention + routed grouped-GEMM) and a hybrid-SSM tenant
-through `Runtime.submit_bundle` — the flushed pool spans all four kernel
+through `Runtime.submit` — the flushed pool spans all four kernel
 families (gemm, grouped_gemm, flash_attention, mamba_scan) and is
 co-scheduled by `plan_mixed` (DESIGN.md §14); the section reports the
 modeled concurrent-vs-sequential speedup of that pool.
+
+The **graph** section (always run; also `run_graph [--smoke]` as the CI
+subcommand) compares dataflow submission (`Runtime.submit(OpGraph)`,
+DESIGN.md §19) against wave-barriered bundle-per-request submission of
+the identical op population: two tenants' multi-layer decode graphs
+overlap (one request's attention concurrent with the other's experts),
+gated ≥1.05x on modeled makespan with cross-graph mixed groups visible
+in telemetry.
 
     PYTHONPATH=src python -m benchmarks.serving [--duration 0.5] [--rate 150]
 
@@ -78,6 +86,7 @@ from repro.runtime import (  # noqa: E402
     TenantSLO,
     adversarial_trace,
     bursty_trace,
+    decode_step_graph,
     decode_step_op_descs,
     decode_step_requests,
     poisson_trace,
@@ -196,10 +205,11 @@ def run_mixed_ops(lib: GOLibrary, steps: int = 60) -> Dict[str, object]:
     """Heterogeneous co-scheduling section (DESIGN.md §14).
 
     Each virtual step, every mixed tenant submits its FULL decode op
-    bundle via `Runtime.submit_bundle`; one flush co-schedules the pooled
-    heterogeneous ops through `plan_mixed`.  The sequential baseline runs
-    every op alone with its isolated-tuned kernel (one launch each) —
-    the same baseline semantics as the trace replay above."""
+    bundle via `Runtime.submit` (a sequence → the §14 mixed queue); one
+    flush co-schedules the pooled heterogeneous ops through
+    `plan_mixed`.  The sequential baseline runs every op alone with its
+    isolated-tuned kernel (one launch each) — the same baseline
+    semantics as the trace replay above."""
     ctrl = ConcurrencyController(library=lib)
     rt = Runtime(ctrl, RuntimeConfig(window_s=WINDOW_S))
     bundles = {a: decode_step_op_descs(get_arch(a), BATCH)
@@ -209,12 +219,12 @@ def run_mixed_ops(lib: GOLibrary, steps: int = 60) -> Dict[str, object]:
     assert families == sorted(FAMILIES), (
         f"mixed pool must span all four kernel families, got {families}")
     for b in bundles.values():
-        rt.prewarm_bundle(b)
+        rt.prewarm(b)
     seq_step = sum(isolated_time(d, lib.get(d).isolated) for d in pool)
     for i in range(steps):
         t = i * (WINDOW_S * 4)
         for arch, bundle in bundles.items():
-            rt.submit_bundle(bundle, tenant=arch, now=t)
+            rt.submit(bundle, tenant=arch, now=t)
         rt.flush(now=t + WINDOW_S, force=True)
     rt.drain(now=steps * WINDOW_S * 4)
     tele = rt.telemetry
@@ -233,6 +243,128 @@ def run_mixed_ops(lib: GOLibrary, steps: int = 60) -> Dict[str, object]:
         "speedup_vs_sequential": (seq_step * steps) / max(busy, 1e-12),
     }
     return out
+
+
+# §19 graph scenario: an MoE tenant and a hybrid-SSM tenant decode
+# side by side — chain structures differ enough that one request's
+# attention/scan genuinely overlaps the other's experts.  Small batch
+# keeps the ops memory-bound, where grouping buys the most.
+GRAPH_ARCHES = ("deepseek-v2-lite-16b", "zamba2-1.2b")
+GRAPH_BATCH = 4
+GRAPH_LAYERS = 2
+GRAPH_REQUESTS = 2  # concurrent in-flight requests per tenant
+
+
+def run_graph(lib: GOLibrary, steps: int = 6, smoke: bool = False
+              ) -> Dict[str, object]:
+    """Dataflow-vs-bundle submission on modeled makespan (DESIGN.md §19.4).
+
+    Two tenants each decode ``GRAPH_REQUESTS`` concurrent
+    ``GRAPH_LAYERS``-layer dependency graphs (`decode_step_graph`) for
+    ``steps`` virtual steps:
+
+    - **graph**: both requests' graphs are live at once; the readiness
+      tracker feeds every concurrency window with ready nodes from
+      either request, so request A's attention shares groups with
+      request B's experts (`cross_graph_groups` counts them).
+    - **bundle** (the pre-§19 API ceiling): the same op population
+      submitted request-serially as one bundle per topological wave with
+      a drain barrier after each — the caller-driven schedule the flat
+      `submit(sequence)` surface forces.
+
+    Same descriptors, same library, same prewarm (per-wave signatures,
+    which favor the *baseline*: its flush signatures are exactly the
+    prewarmed ones).  Gates: graph beats bundle ≥1.05x on makespan;
+    ≥1 cross-graph mixed group; every graph completes and counts as ONE
+    logical request (§19.3)."""
+    if smoke:
+        steps = 2
+    graphs = {a: decode_step_graph(get_arch(a), GRAPH_BATCH,
+                                   layers=GRAPH_LAYERS)
+              for a in GRAPH_ARCHES}
+
+    rt = Runtime(ConcurrencyController(library=lib),
+                 RuntimeConfig(window_s=0.0))
+    for g in graphs.values():
+        rt.prewarm(g)
+    handles = []
+    for _ in range(steps):
+        now = rt.device_free_t
+        for arch, g in graphs.items():
+            for _ in range(GRAPH_REQUESTS):
+                handles.append(rt.submit(g, tenant=arch, now=now))
+        rt.drain(now=now)
+    graph_makespan = rt.device_free_t
+    tele = rt.telemetry
+
+    rtb = Runtime(ConcurrencyController(library=lib),
+                  RuntimeConfig(window_s=0.0))
+    for g in graphs.values():
+        rtb.prewarm(g)
+    for _ in range(steps):
+        for arch, g in graphs.items():
+            for _ in range(GRAPH_REQUESTS):
+                for wave in g.waves():
+                    rtb.submit([g.nodes[n].desc for n in wave],
+                               tenant=arch, now=rtb.device_free_t)
+                    rtb.drain(now=rtb.device_free_t)
+    bundle_makespan = rtb.device_free_t
+
+    lat = np.asarray([h.latency_s for h in handles], float)
+    out = {
+        "tenants": list(GRAPH_ARCHES),
+        "layers": GRAPH_LAYERS,
+        "batch": GRAPH_BATCH,
+        "requests_per_tenant": GRAPH_REQUESTS,
+        "steps": steps,
+        "smoke": smoke,
+        "nodes_per_step": sum(len(g) for g in graphs.values()),
+        "graph_requests": tele.graphs_submitted,
+        "graphs_completed": tele.graphs_completed,
+        "graph_makespan_s": graph_makespan,
+        "bundle_makespan_s": bundle_makespan,
+        "graph_speedup": bundle_makespan / max(graph_makespan, 1e-12),
+        "cross_graph_groups": tele.cross_graph_groups(),
+        "max_ready_depth": tele.max_ready_depth,
+        "ready_depths": tele.ready_depth_histogram(),
+        "graph_p99_ms": float(np.percentile(lat, 99)) * 1e3,
+        "mean_cd": round(tele.mean_cd(), 3),
+    }
+    # ------------------------------------------------------------- gates
+    assert tele.graphs_completed == tele.graphs_submitted, (
+        f"{tele.graphs_submitted - tele.graphs_completed} graphs never "
+        f"completed")
+    assert tele.completed == tele.submitted == tele.graphs_submitted, (
+        "a graph must count as exactly ONE logical request (§19.3): "
+        f"submitted={tele.submitted} completed={tele.completed} "
+        f"graphs={tele.graphs_submitted}")
+    assert all(h.done for h in handles)
+    assert out["cross_graph_groups"] >= 1, (
+        "no concurrency window mixed nodes from two graphs — the "
+        "dataflow executor is not overlapping requests")
+    assert out["graph_speedup"] >= 1.05, (
+        f"graph submission speedup {out['graph_speedup']:.4f}x < 1.05x "
+        f"vs wave-barriered bundles")
+    return out
+
+
+def graph_main(argv=None) -> int:
+    """`python -m benchmarks.serving run_graph [--smoke]` — the CI
+    graph-smoke entry point (gates are asserted inside `run_graph`)."""
+    ap = argparse.ArgumentParser(prog="benchmarks.serving run_graph")
+    ap.add_argument("--smoke", action="store_true",
+                    help="short run for the tier-1 CI step")
+    ap.add_argument("--steps", type=int, default=6)
+    args = ap.parse_args(argv)
+    rep = run_graph(GOLibrary(), steps=args.steps, smoke=args.smoke)
+    print(f"# graph: {rep['graph_requests']} graphs "
+          f"({rep['nodes_per_step']} nodes/step) over "
+          f"{'+'.join(rep['tenants'])} | makespan "
+          f"{rep['graph_makespan_s'] * 1e3:.3f}ms vs bundle "
+          f"{rep['bundle_makespan_s'] * 1e3:.3f}ms = "
+          f"{rep['graph_speedup']:.3f}x | {rep['cross_graph_groups']} "
+          f"cross-graph groups, ready depth ≤{rep['max_ready_depth']}")
+    return 0
 
 
 # §17.4 adversarial shape: one tenant's monolithic prefill GEMM
@@ -558,6 +690,8 @@ def main(argv=None) -> Dict[str, Dict[str, Dict[str, float]]]:
     argv = sys.argv[1:] if argv is None else list(argv)
     if argv[:1] == ["run_chaos"]:
         sys.exit(chaos_main(argv[1:]))
+    if argv[:1] == ["run_graph"]:
+        sys.exit(graph_main(argv[1:]))
     ap = argparse.ArgumentParser()
     ap.add_argument("--duration", type=float, default=0.5,
                     help="trace duration in virtual seconds")
@@ -641,7 +775,16 @@ def main(argv=None) -> Dict[str, Dict[str, Dict[str, float]]]:
           f"{worst['quarantines']} quarantines | worst p99 "
           f"{chaos['worst_p99_ratio']}x")
 
-    _write_bench_json(results, mixed, measured, adversarial, chaos, flags)
+    graph = run_graph(lib)
+    print(f"# graph: {graph['graph_requests']} graphs "
+          f"({graph['nodes_per_step']} nodes/step) over "
+          f"{'+'.join(graph['tenants'])} | dataflow vs wave-barriered "
+          f"bundles {graph['graph_speedup']:.3f}x | "
+          f"{graph['cross_graph_groups']} cross-graph groups, "
+          f"ready depth ≤{graph['max_ready_depth']}")
+
+    _write_bench_json(results, mixed, measured, adversarial, chaos, graph,
+                      flags)
     lib.save()
 
     if not args.no_verify:
@@ -662,7 +805,7 @@ def main(argv=None) -> Dict[str, Dict[str, Dict[str, float]]]:
 
 
 def _write_bench_json(results, mixed, measured, adversarial, chaos,
-                      flags) -> None:
+                      graph, flags) -> None:
     """`results/BENCH_serving.json`: the serving benchmark's count-based
     metric record.  ``trend_metrics`` is the generic contract consumed by
     `benchmarks/trend.py` (the CI bench-trend gate): each entry declares
@@ -729,6 +872,15 @@ def _write_bench_json(results, mixed, measured, adversarial, chaos,
         "value": chaos["fallbacks_total"], "better": "higher"}
     trend["chaos_worst_p99_ratio"] = {
         "value": chaos["worst_p99_ratio"], "better": "lower"}
+    # §19.4 dataflow gate: graph submission must keep beating the
+    # wave-barriered bundle ceiling, the readiness tracker must keep
+    # exposing multi-node windows, and every submitted graph counts.
+    trend["graph_speedup"] = {
+        "value": round(graph["graph_speedup"], 4), "better": "higher"}
+    trend["ready_set_depth"] = {
+        "value": graph["max_ready_depth"], "better": "higher"}
+    trend["graph_requests"] = {
+        "value": graph["graph_requests"], "better": "higher"}
     blob = {
         "flags": flags,
         "traces": results,
@@ -736,6 +888,7 @@ def _write_bench_json(results, mixed, measured, adversarial, chaos,
         "measured": measured,
         "adversarial": adversarial,
         "chaos": chaos,
+        "graph": graph,
         "trend_metrics": trend,
     }
     out = RESULTS / "BENCH_serving.json"

@@ -72,6 +72,20 @@ class GemmRequest:
 OpRequest = GemmRequest
 
 
+def bind_operands(desc, operands: Optional[tuple] = None,
+                  tag: str = "") -> GemmRequest:
+    """Build the family-correct request for ``desc`` from a positional
+    operand tuple (`runtime.graph.FAMILY_SLOTS` order — what `_run_op`
+    consumes): GEMMs unpack into ``a``/``b``, every other family keeps
+    the tuple in ``inputs``.  ``operands=None`` is a shadow
+    (modeled-only) request.  This is the single point where graph-edge
+    wiring meets the executor's operand layout."""
+    if family_of(desc) == "gemm":
+        a, b = operands if operands is not None else (None, None)
+        return GemmRequest(desc=desc, a=a, b=b, tag=tag)
+    return GemmRequest(desc=desc, tag=tag, inputs=operands)
+
+
 @dataclass
 class GroupPlan:
     indices: List[int]            # queue positions executed in this launch

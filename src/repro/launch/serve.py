@@ -37,6 +37,11 @@ def main(argv=None):
                     help="with --runtime: co-schedule the full decode op "
                          "bundle (attention/MoE/scan + GEMMs) as one "
                          "heterogeneous group (DESIGN.md §14)")
+    ap.add_argument("--graph", action="store_true",
+                    help="with --runtime: submit each decode step as a "
+                         "dependency graph (QKV -> attention -> O-proj -> "
+                         "FFN/MoE) and let the dataflow executor order it "
+                         "(DESIGN.md §19)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -65,7 +70,7 @@ def main(argv=None):
     toks = greedy_decode(
         model, params, prompt, s_max=args.prompt_len + args.gen + 1,
         steps=args.gen, runtime=runtime, tenant=cfg.name,
-        mixed_ops=args.mixed_ops,
+        mixed_ops=args.mixed_ops, graph=args.graph,
     )
     dt = time.time() - t0
     print(f"[serve] {cfg.name}: batch={args.batch} prompt={args.prompt_len} "

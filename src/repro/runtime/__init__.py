@@ -13,12 +13,22 @@ from repro.runtime.faults import (
     LaunchStall,
     NonFiniteOutput,
 )
+from repro.runtime.graph import (
+    FAMILY_SLOTS,
+    GraphEdge,
+    GraphError,
+    GraphNode,
+    GraphState,
+    OpGraph,
+)
 from repro.runtime.integration import (
     decode_step_descs,
+    decode_step_graph,
     decode_step_op_descs,
     decode_step_requests,
     prewarm_decode,
     submit_decode_bundle,
+    submit_decode_graph,
     submit_decode_step,
 )
 from repro.runtime.runtime import (
@@ -44,7 +54,10 @@ __all__ = [
     "CircuitBreaker", "FaultInjector", "FaultRule", "InjectedFault",
     "LaunchFault", "LaunchStall", "NonFiniteOutput",
     "adversarial_trace", "bursty_trace", "poisson_trace",
-    "uniform_trace", "decode_step_descs", "decode_step_op_descs",
+    "uniform_trace", "decode_step_descs", "decode_step_graph",
+    "decode_step_op_descs",
     "decode_step_requests", "prewarm_decode", "submit_decode_bundle",
-    "submit_decode_step",
+    "submit_decode_graph", "submit_decode_step",
+    "OpGraph", "GraphNode", "GraphEdge", "GraphError", "GraphState",
+    "FAMILY_SLOTS",
 ]

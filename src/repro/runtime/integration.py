@@ -18,12 +18,15 @@ mode, plan-cache hit rate), and executes them for real when
 """
 from __future__ import annotations
 
+import math
+import warnings
 from dataclasses import replace
-from typing import List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.gemm_desc import GemmDesc
 from repro.core.op_desc import AttentionDesc, GroupedGemmDesc, ScanDesc
 from repro.core.scheduler import ConcurrencyController, GemmRequest
+from repro.runtime.graph import OpGraph, out_shape, slot_shape
 from repro.runtime.runtime import Runtime, Ticket
 
 
@@ -171,6 +174,205 @@ def decode_step_op_descs(
     return descs
 
 
+def _wire(
+    graph: OpGraph,
+    name: str,
+    desc,
+    feeds: Optional[Dict[object, Optional[str]]] = None,
+    after: Sequence[str] = (),
+    tag: str = "",
+) -> str:
+    """Add a node whose candidate producers become DATA edges when the
+    element counts line up and CONTROL edges when they don't (§19.1).
+
+    A decode step's real dataflow passes through state and glue the
+    runtime does not model as ops — the KV cache, expert routing
+    scatter, residual adds, norms.  Where the producer's output is
+    shape-compatible with the consumer's operand slot the edge carries
+    the tensor (and executes for real when operands are present); where
+    it is not (attention k/v read the *cache*, not this step's k/v
+    projection), the dependency is ordering-only.  One helper, one
+    policy, every architecture."""
+    deps: Dict[object, str] = {}
+    ctrl = list(after)
+    for slot, src in (feeds or {}).items():
+        if src is None:
+            continue
+        if (math.prod(out_shape(graph.nodes[src].desc))
+                == math.prod(slot_shape(desc, slot))):
+            deps[slot] = src
+        else:
+            ctrl.append(src)
+    return graph.add(name, desc, deps=deps, after=ctrl, tag=tag)
+
+
+def decode_step_graph(
+    cfg,
+    batch: int,
+    context: int = 1024,
+    dtype: str = "bf16",
+    layers: int = 1,
+) -> OpGraph:
+    """The dependency graph of ``layers`` decode-step layers (§19.2) —
+    the same op population as `decode_step_op_descs`, with the chain
+    structure the flat bundle erases:
+
+    - GQA: q/k/v projections → attention (q feeds the query slot; k/v
+      are control edges, the cache carries the data) → O-projection →
+      gate/up → down;
+    - MLA: q/kv down-projections → q up-projection → attention →
+      O-projection (control: v_head_dim ≠ qk head dim) → MoE;
+    - MoE: the routed pool as its two ragged grouped-GEMM launches
+      (routing scatter = control edge in, up→down = data edge) plus the
+      shared-expert dense MLP, all fed by the attention output;
+    - SSM/hybrid: in-projection → SSD scan → out-projection, with the
+      attention branch (hybrid) running in parallel off the layer input.
+
+    Consecutive layers chain by control edges from layer sinks to the
+    next layer's input projections.  Per-layer node names are prefixed
+    ``L<i>.`` (e.g. ``"L0.attn"``); the single-layer names are the bare
+    suffixes users see in telemetry tags.
+
+    What a caller could express before this existed: `waves()` of this
+    graph, one barrier'd bundle per wave — exactly the baseline
+    `benchmarks/serving.py run_graph` compares against.
+    """
+    g = OpGraph()
+    sinks: List[str] = []
+    for ell in range(layers):
+        sinks = _add_decode_layer(g, cfg, batch, context, dtype,
+                                  prefix=f"L{ell}." if layers > 1 else "",
+                                  roots_after=sinks)
+    g.validate()
+    return g
+
+
+def _add_decode_layer(
+    g: OpGraph, cfg, batch: int, context: int, dtype: str,
+    prefix: str, roots_after: List[str],
+) -> List[str]:
+    """Wire one layer; returns its sink node names (the next layer's
+    control-edge sources)."""
+    bundles = dict(decode_step_descs(cfg, batch, dtype))
+    P = prefix
+    sinks: List[str] = []
+
+    # ------------------------------------------------ attention / SSM
+    if cfg.attn_type == "mla":
+        down = bundles["mla-down"]
+        q_src = _wire(g, P + "q-down", down[0], after=roots_after,
+                      tag="mla-down")
+        kv = _wire(g, P + "kv-down", down[1], after=roots_after,
+                   tag="mla-down")
+        if "mla-q-up" in bundles:
+            q_src = _wire(g, P + "q-up", bundles["mla-q-up"][0],
+                          feeds={"a": q_src}, tag="mla-q-up")
+        hd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        attn = _wire(g, P + "attn",
+                     AttentionDesc(batch, cfg.n_heads, cfg.n_heads, 1,
+                                   context, hd, True, dtype),
+                     feeds={0: q_src}, after=[kv], tag="attn")
+        block_out = _wire(g, P + "o", bundles["attn-out"][0],
+                          feeds={"a": attn}, tag="attn-out")
+    elif "ssm-in" in bundles:
+        ssm_in = _wire(g, P + "ssm-in", bundles["ssm-in"][0],
+                       after=roots_after, tag="ssm-in")
+        if cfg.family == "ssm" and not cfg.ssm_state:
+            # xLSTM mLSTM step: C-matrix recurrence + normalizer scan.
+            hp = 2 * cfg.d_model // cfg.n_heads
+            scan = _wire(g, P + "scan",
+                         ScanDesc(batch, 1, cfg.n_heads, hp, hp, dtype),
+                         feeds={0: ssm_in}, tag="scan")
+            norm = _wire(g, P + "scan-norm",
+                         ScanDesc(batch, 1, cfg.n_heads, 1, hp, dtype),
+                         feeds={0: ssm_in}, tag="scan")
+            block_out = _wire(g, P + "ssm-out", bundles["ssm-out"][0],
+                              feeds={"a": scan}, after=[norm],
+                              tag="ssm-out")
+        else:
+            scan = _wire(g, P + "scan",
+                         ScanDesc(batch, 1, cfg.ssm_n_heads,
+                                  cfg.ssm_head_dim, cfg.ssm_state, dtype),
+                         feeds={0: ssm_in}, tag="scan")
+            block_out = _wire(g, P + "ssm-out", bundles["ssm-out"][0],
+                              feeds={"a": scan}, tag="ssm-out")
+        if cfg.family == "hybrid":
+            # Hybrid (Zamba-style): the shared attention block runs off
+            # the same layer input, in parallel with the Mamba branch.
+            hd = cfg.resolved_head_dim
+            sinks.append(_wire(
+                g, P + "attn",
+                AttentionDesc(batch, cfg.n_heads, cfg.n_kv_heads, 1,
+                              context, hd, True, dtype),
+                after=roots_after, tag="attn"))
+    else:
+        qkv = bundles["qkv"]
+        hd = cfg.resolved_head_dim
+        q = _wire(g, P + "q", qkv[0], after=roots_after, tag="qkv")
+        k = _wire(g, P + "k", qkv[1], after=roots_after, tag="qkv")
+        v = _wire(g, P + "v", qkv[2], after=roots_after, tag="qkv")
+        attn = _wire(g, P + "attn",
+                     AttentionDesc(batch, cfg.n_heads, cfg.n_kv_heads, 1,
+                                   context, hd, True, dtype),
+                     feeds={0: q}, after=[k, v], tag="attn")
+        block_out = _wire(g, P + "o", bundles["attn-out"][0],
+                          feeds={"a": attn}, tag="attn-out")
+
+    # --------------------------------------------------------- FFN / MoE
+    if cfg.n_routed_experts:
+        # The routed pool as the ragged launches that actually run it
+        # (`decode_step_op_descs`); the per-expert dense GEMMs are that
+        # same work pre-collapse, so the graph carries only the grouped
+        # form.  Routing scatter in = control edge; up → down = data.
+        ga = min(cfg.n_routed_experts, max(batch * cfg.moe_top_k, 1))
+        rows = batch * cfg.moe_top_k
+        up = _wire(g, P + "moe-up",
+                   GroupedGemmDesc(ga, rows, cfg.moe_d_ff, cfg.d_model,
+                                   dtype),
+                   feeds={0: block_out}, tag="moe-up")
+        sinks.append(_wire(g, P + "moe-down",
+                           GroupedGemmDesc(ga, rows, cfg.d_model,
+                                           cfg.moe_d_ff, dtype),
+                           feeds={0: up}, tag="moe-down"))
+        if cfg.n_shared_experts:
+            sg = _wire(g, P + "shared-gate", bundles["shared-up"][0],
+                       feeds={"a": block_out}, tag="shared-up")
+            su = _wire(g, P + "shared-up", bundles["shared-up"][1],
+                       feeds={"a": block_out}, tag="shared-up")
+            sinks.append(_wire(g, P + "shared-down",
+                               bundles["shared-down"][0],
+                               feeds={"a": su}, after=[sg],
+                               tag="shared-down"))
+    elif cfg.d_ff > 0:
+        gate = _wire(g, P + "gate", bundles["ffn-up"][0],
+                     feeds={"a": block_out}, tag="ffn-up")
+        up = _wire(g, P + "up", bundles["ffn-up"][1],
+                   feeds={"a": block_out}, tag="ffn-up")
+        sinks.append(_wire(g, P + "down", bundles["ffn-down"][0],
+                           feeds={"a": up}, after=[gate], tag="ffn-down"))
+    else:
+        sinks.append(block_out)
+    return sinks
+
+
+def submit_decode_graph(
+    runtime: Runtime,
+    cfg,
+    batch: int,
+    context: int = 1024,
+    layers: int = 1,
+    tenant: str = "default",
+    now: float | None = None,
+    dtype: str = "bf16",
+) -> Ticket:
+    """Admit one request's decode step as a dependency graph (§19.2):
+    returns the single graph handle; per-node results are addressable by
+    the `decode_step_graph` node names."""
+    return runtime.submit(
+        decode_step_graph(cfg, batch, context, dtype, layers),
+        tenant=tenant, now=now)
+
+
 def submit_decode_bundle(
     runtime: Runtime,
     cfg,
@@ -180,12 +382,18 @@ def submit_decode_bundle(
     now: float | None = None,
     dtype: str = "bf16",
 ) -> List[Ticket]:
-    """Admit one decode step's FULL op bundle (all kernel families) into
-    the runtime's mixed-bundle queue for co-scheduling (§14)."""
-    return runtime.submit_bundle(
+    """Deprecated: use ``runtime.submit(decode_step_op_descs(...))`` for
+    the flat bundle or `submit_decode_graph` for the dataflow form
+    (§19)."""
+    warnings.warn(
+        "integration.submit_decode_bundle is deprecated; use "
+        "runtime.submit(decode_step_op_descs(...)) or submit_decode_graph "
+        "(DESIGN.md §19)",
+        DeprecationWarning, stacklevel=2)
+    return list(runtime.submit(
         decode_step_op_descs(cfg, batch, context, dtype),
         tenant=tenant, now=now,
-    )
+    ).members)
 
 
 def prewarm_decode(

@@ -22,6 +22,11 @@ This module is the missing online layer:
 - launches are interleaved **round-robin across compatibility classes**,
   so one tenant's large GEMMs cannot starve another tenant's small ones.
 - `drain()` force-flushes until the queues are empty.
+- `submit()` is polymorphic (§19): a single op, a §14 bundle, or an
+  `runtime.graph.OpGraph` — the dataflow path, where a readiness tracker
+  releases nodes into the mixed-op pool as predecessors complete, so one
+  request's attention can share a concurrency window with another
+  request's experts.  Every kind returns one `Ticket`.
 
 The runtime keeps a modeled device timeline (`device_free_t`) so latency
 accounting works identically in closed-loop replay (virtual clock, the
@@ -34,6 +39,7 @@ from __future__ import annotations
 import bisect
 import math
 import time
+import warnings
 from collections import OrderedDict
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -53,6 +59,7 @@ from repro.core.scheduler import (
     GemmRequest,
     GroupPlan,
     Schedule,
+    bind_operands,
     compat_key,
     execute_schedule,
 )
@@ -62,6 +69,7 @@ from repro.runtime.faults import (
     NonFiniteOutput,
     fault_kind,
 )
+from repro.runtime.graph import GraphState, OpGraph
 from repro.runtime.telemetry import GroupRecord, Telemetry
 
 Signature = Tuple[Tuple[str, ...], int]
@@ -121,11 +129,32 @@ DEFAULT_SLO = TenantSLO()
 
 @dataclass
 class Ticket:
-    """Handle returned by `submit()`; filled in by the flush that serves it."""
+    """The ONE handle type every submission kind returns (§19.2).
+
+    ``kind`` says what the handle stands for — callers never branch on
+    it, but the runtime's completion plumbing does:
+
+    - ``"op"``: a single op (the classic ticket; ``request`` set).
+    - ``"node"``: one graph node.  ``node``/``graph`` link it to its
+      name and its graph handle; ``logical=False`` (the *graph* is the
+      logical request, §19.3) and ``request`` is bound at release time,
+      once the predecessors' outputs are wired in.
+    - ``"bundle"``: aggregate over ``members`` (each an ordinary logical
+      "op" ticket, preserving §14/§17 per-member accounting);
+      ``request`` is None.
+    - ``"graph"``: aggregate over ``nodes`` (name → node ticket) with
+      the live `GraphState`; one logical request, latency = sink-node
+      completion.
+
+    Aggregates mirror the sliced-parent semantics ops already have: the
+    handle completes when its last member/node does, and per-node
+    results are addressed through the handle (``handle["o_proj"]``,
+    `result_of`) exactly like a sliced parent's merged ``result``.
+    """
 
     seq: int
     tenant: str
-    request: GemmRequest
+    request: Optional[GemmRequest]
     submit_t: float
     done_t: Optional[float] = None
     result: object = None           # jax.Array when executed
@@ -138,6 +167,15 @@ class Ticket:
     parent: Optional["Ticket"] = field(default=None, repr=False)
     pieces: Optional[List["Ticket"]] = field(default=None, repr=False)
     merge_plan: Optional[SlicePlan] = field(default=None, repr=False)
+    # Graph / aggregate linkage (§19.2).
+    kind: str = "op"                # "op" | "node" | "bundle" | "graph"
+    logical: bool = True            # counted in submitted/completed (§19.3)
+    node: Optional[str] = None      # node name (kind == "node")
+    graph: Optional["Ticket"] = field(default=None, repr=False)
+    agg: Optional["Ticket"] = field(default=None, repr=False)
+    members: Optional[List["Ticket"]] = field(default=None, repr=False)
+    nodes: Optional[Dict[str, "Ticket"]] = field(default=None, repr=False)
+    state: Optional[GraphState] = field(default=None, repr=False)
 
     @property
     def desc(self) -> GemmDesc:
@@ -150,6 +188,37 @@ class Ticket:
     @property
     def sliced(self) -> bool:
         return self.pieces is not None
+
+    # ------------------------------------------- aggregate views (§19.2)
+    @property
+    def done(self) -> bool:
+        if self.state is not None:
+            return self.state.done
+        if self.members is not None:
+            return all(m.done_t is not None for m in self.members)
+        return self.done_t is not None
+
+    def __getitem__(self, key) -> "Ticket":
+        """Per-node (graph, by name) or per-member (bundle, by index)
+        ticket — the uniform way callers reach constituent results."""
+        if self.nodes is not None:
+            return self.nodes[key]
+        if self.members is not None:
+            return self.members[key]
+        raise TypeError(f"{self.kind!r} ticket has no constituents")
+
+    def result_of(self, name: str):
+        """Executed result of one graph node (None in shadow mode)."""
+        return self[name].result
+
+    def results(self) -> Dict[object, object]:
+        """All constituent results keyed by node name (graph) or
+        position (bundle); a plain op maps its own seq to its result."""
+        if self.nodes is not None:
+            return {n: t.result for n, t in self.nodes.items()}
+        if self.members is not None:
+            return {i: t.result for i, t in enumerate(self.members)}
+        return {self.seq: self.result}
 
 
 @dataclass
@@ -331,6 +400,34 @@ class Runtime:
     # ------------------------------------------------------------- admit
     def submit(
         self,
+        work,
+        tenant: str = "default",
+        now: float | None = None,
+    ) -> Ticket:
+        """THE submission surface (§19): one polymorphic entry point.
+
+        - a single `GemmRequest`/OpDesc → per-class admission (§10), the
+          classic ``"op"`` ticket;
+        - a sequence of them → a heterogeneous bundle into the shared
+          mixed-op queue (§14), returned as one ``"bundle"`` handle over
+          per-member tickets;
+        - an `OpGraph` → dataflow submission (§19.2): the ready frontier
+          is released now, dependents release as predecessors complete,
+          and one ``"graph"`` handle exposes per-node results by name.
+
+        Always returns exactly one `Ticket`; callers never branch on the
+        submission kind.  The historical names (`submit_bundle`,
+        `integration.submit_decode_bundle`) survive as deprecation
+        wrappers around this method.
+        """
+        if isinstance(work, OpGraph):
+            return self._submit_graph(work, tenant, now)
+        if isinstance(work, (list, tuple)):
+            return self._submit_bundle(work, tenant, now)
+        return self._submit_one(work, tenant, now)
+
+    def _submit_one(
+        self,
         request: GemmRequest | GemmDesc,
         tenant: str = "default",
         now: float | None = None,
@@ -370,16 +467,36 @@ class Runtime:
         tenant: str = "default",
         now: float | None = None,
     ) -> List[Ticket]:
+        """Deprecated: use ``submit(sequence)`` (§19).  Returns the
+        member tickets like the historical API did."""
+        warnings.warn(
+            "Runtime.submit_bundle is deprecated; use Runtime.submit() "
+            "with a sequence (DESIGN.md §19)",
+            DeprecationWarning, stacklevel=2)
+        return list(self.submit(list(requests), tenant=tenant,
+                                now=now).members)
+
+    def _submit_bundle(
+        self,
+        requests: Sequence,
+        tenant: str = "default",
+        now: float | None = None,
+    ) -> Ticket:
         """Admit a heterogeneous decode bundle for co-scheduling (§14).
 
-        Unlike `submit`, the ops are NOT split into per-family §6.7
-        class queues: they enter the shared mixed-bundle queue, and
-        `flush` plans that queue through
+        Unlike single-op admission, the ops are NOT split into
+        per-family §6.7 class queues: they enter the shared mixed-bundle
+        queue, and `flush` plans that queue through
         `ConcurrencyController.plan_mixed` — so a decode step's QKV
         GEMMs, attention, MoE grouped-GEMM, and scan become one (or a
         few) concurrent groups with the CD decided over the
         heterogeneous pool.  Same plan cache, same fast path: the bundle
         signature is canonical, so steady-state traffic replans nothing.
+
+        Each member stays a *logical* request (per-member latency
+        accounting, §14/§17 semantics unchanged); the returned
+        ``"bundle"`` handle is an aggregate view that completes with its
+        last member.
         """
         now = self.clock() if now is None else now
         slo = self.tenant_slo(tenant)
@@ -387,7 +504,7 @@ class Runtime:
         if q is None:
             q = self._queues[MIXED_CLASS] = _ClassQueue()
             self._order.append(MIXED_CLASS)
-        out: List[Ticket] = []
+        members: List[Ticket] = []
         for request in requests:
             if not isinstance(request, GemmRequest):
                 request = GemmRequest(desc=request)
@@ -403,8 +520,84 @@ class Runtime:
             else:
                 q.add(ticket, slo.weight)
             self.telemetry.record_submit()
-            out.append(ticket)
-        return out
+            members.append(ticket)
+        self._seq += 1
+        handle = Ticket(seq=self._seq, tenant=tenant, request=None,
+                        submit_t=now, deadline_t=now + slo.p99_target_s,
+                        rank=slo.rank, kind="bundle", logical=False,
+                        members=members)
+        for m in members:
+            m.agg = handle
+        return handle
+
+    # ------------------------------------------------ graph admission (§19)
+    def _submit_graph(
+        self,
+        graph: OpGraph,
+        tenant: str = "default",
+        now: float | None = None,
+    ) -> Ticket:
+        """Admit an `OpGraph` for dataflow execution (§19.2).
+
+        Validates the graph, creates one node ticket per op (all held by
+        the returned ``"graph"`` handle, addressable by node name), and
+        releases the ready frontier (the roots) into the shared mixed-op
+        queue.  Dependents are released by `_complete_node` as their
+        predecessors complete — with the predecessors' (possibly
+        fallback-rung, §18.2) outputs wired into their operand slots —
+        so `plan_mixed` sees, at every flush, the union of ready nodes
+        across all live graphs, bundles, and requests.
+
+        The whole graph is ONE logical request (§19.3): `submitted`
+        counts it once and its latency is sink-node completion, exactly
+        parallel to a sliced parent's parent-once accounting.
+        """
+        now = self.clock() if now is None else now
+        slo = self.tenant_slo(tenant)
+        state = GraphState(graph)       # validates (cycles, slots, shapes)
+        self._seq += 1
+        handle = Ticket(seq=self._seq, tenant=tenant, request=None,
+                        submit_t=now, deadline_t=now + slo.p99_target_s,
+                        rank=slo.rank, kind="graph", logical=True,
+                        nodes={}, state=state)
+        for name in state.order:
+            self._seq += 1
+            tk = Ticket(seq=self._seq, tenant=tenant, request=None,
+                        submit_t=now, deadline_t=handle.deadline_t,
+                        rank=slo.rank, kind="node", logical=False,
+                        node=name, graph=handle)
+            state.tickets[name] = tk
+            handle.nodes[name] = tk
+        self.telemetry.record_submit()          # ONE logical request
+        self.telemetry.record_graph_submit(len(state.order))
+        for name in state.ready():
+            self._release_node(handle, name, now)
+        return handle
+
+    def _release_node(self, handle: Ticket, name: str, now: float) -> None:
+        """Move one ready graph node into the mixed-op queue: bind its
+        request from the operand slots wired so far (`bind_operands`; a
+        partially-known slot set stays a shadow request), stamp its
+        submit time with the release time (so waiting-time/EDF ordering
+        measures *readiness*, not graph admission), and admission-slice
+        it exactly like a directly-submitted op (§17.2) — the sliced
+        node completes through the ordinary parent-merge path before its
+        dependents see the merged result."""
+        state = handle.state
+        state.mark_released(name)
+        gnode = state.graph.nodes[name]
+        tk = state.tickets[name]
+        tk.submit_t = max(tk.submit_t, now)
+        tk.request = bind_operands(gnode.desc, state.operands_for(name),
+                                   tag=gnode.tag or name)
+        weight = self.tenant_slo(handle.tenant).weight
+        parts = self._admission_parts(gnode.desc)
+        if parts > 1:
+            plan = slice_plan(gnode.desc, parts)
+            for piece in self._make_pieces(tk, plan):
+                self._enqueue(piece, weight, class_key=MIXED_CLASS)
+        else:
+            self._enqueue(tk, weight, class_key=MIXED_CLASS)
 
     def set_available(self, n: int) -> None:
         """Update live available parallelism (other streams/devices taking
@@ -450,14 +643,37 @@ class Runtime:
         return sum(len(q) for q in self._queues.values())
 
     # ------------------------------------------------------------ prewarm
-    def prewarm(self, descs: Sequence[GemmDesc], plan: bool = True) -> int:
-        """Tune GEMMs ahead of traffic (GOLibrary.prewarm) and optionally
-        pre-populate the plan cache with the all-at-once queue signature.
+    def prewarm(self, work, plan: bool = True) -> int:
+        """THE prewarm surface (§19): tune ahead of traffic and seed the
+        plan cache, polymorphic like `submit`:
+
+        - an `OpGraph` → tune every node desc and seed the mixed-queue
+          signature of each topological wave (what successive flushes of
+          a lone graph will plan);
+        - a GEMM-only sequence → the classic catalog prewarm: tune all,
+          seed each §6.7 class's all-at-once signature (this is a tuning
+          *catalog*, e.g. every batch size a decode service may see, not
+          a co-submitted bundle);
+        - a sequence containing any non-GEMM family → a §14 decode
+          bundle: tune all, seed the bundle's mixed-queue signature.
+          (A GEMM-only bundle destined for `submit(sequence)` should be
+          prewarmed as a single-wave `OpGraph` to seed its mixed
+          signature.)
 
         Planning cost paid here is recorded as prewarm overhead (not as an
         online cache miss), so the live hit rate measures steady-state
         cache behaviour while `cp_overhead_paid_s` still accounts for
         every plan actually derived."""
+        if isinstance(work, OpGraph):
+            fresh = self.ctrl.lib.prewarm(work.descs())
+            if plan:
+                for wave in work.waves():
+                    self._seed_mixed_plan(
+                        [work.nodes[n].desc for n in wave])
+            return fresh
+        descs = list(work) if isinstance(work, (list, tuple)) else [work]
+        if any(family_of(d) != "gemm" for d in descs):
+            return self._prewarm_mixed(descs, plan)
         fresh = self.ctrl.lib.prewarm(descs)
         if plan and descs:
             for key in {compat_key(d) for d in descs}:
@@ -468,20 +684,32 @@ class Runtime:
         return fresh
 
     def prewarm_bundle(self, descs: Sequence) -> int:
+        """Deprecated: use ``prewarm(sequence)`` / ``prewarm(graph)``
+        (§19)."""
+        warnings.warn(
+            "Runtime.prewarm_bundle is deprecated; use Runtime.prewarm() "
+            "(DESIGN.md §19)",
+            DeprecationWarning, stacklevel=2)
+        return self._prewarm_mixed(list(descs), plan=True)
+
+    def _prewarm_mixed(self, descs: List, plan: bool = True) -> int:
         """Tune a heterogeneous bundle's ops ahead of traffic and seed the
-        plan cache with its mixed-queue signature (§14) — the bundle
-        analogue of `prewarm`, so the first live decode step is already a
-        cache-hit flush."""
-        descs = list(descs)
+        plan cache with its mixed-queue signature (§14), so the first
+        live decode step is already a cache-hit flush."""
         fresh = self.ctrl.lib.prewarm(descs)
-        if descs:
-            members = self._canonical_sort(descs)
-            _, hit = self._plan_for_keys(
-                (MIXED_CLASS,) + tuple(d.key() for d in members),
-                lambda: members, planner=self.ctrl.plan_mixed)
-            if not hit:
-                self.telemetry.record_prewarm_plan(CP_OVERHEAD_S)
+        if plan and descs:
+            self._seed_mixed_plan(descs)
         return fresh
+
+    def _seed_mixed_plan(self, descs: List) -> None:
+        """Derive (and cache) the mixed-queue plan for one co-submitted
+        desc set, billed as prewarm overhead."""
+        members = self._canonical_sort(descs)
+        _, hit = self._plan_for_keys(
+            (MIXED_CLASS,) + tuple(d.key() for d in members),
+            lambda: members, planner=self.ctrl.plan_mixed)
+        if not hit:
+            self.telemetry.record_prewarm_plan(CP_OVERHEAD_S)
 
     # -------------------------------------------------------------- flush
     def flush(
@@ -536,6 +764,15 @@ class Runtime:
             # any future regression to a full re-sort).
             tickets, sig_keys = self._queues[key].take_all()
             if key == MIXED_CLASS:
+                # Ready-set depth (§19.3): how many graph nodes this
+                # concurrency window could draw from — the dataflow
+                # executor's analogue of queue depth.
+                depth = sum(1 for t in tickets
+                            if t.kind == "node" or
+                            (t.parent is not None
+                             and t.parent.kind == "node"))
+                if depth:
+                    self.telemetry.record_ready_depth(depth)
                 ranks = [t.rank for t in tickets] if edf else None
                 if ranks is not None and len(set(ranks)) > 1:
                     # Rank-aware chunking changes the plan, so the rank
@@ -637,6 +874,7 @@ class Runtime:
                 achieved_time_s=achieved,
                 cache_hit=launch.cache_hit,
                 fallback=launch.fallback,
+                graph_ids=_graph_ids(launch.tickets),
             ))
             self._feed_calibration(launch, achieved)
         if launches:
@@ -664,12 +902,15 @@ class Runtime:
 
     # ------------------------------------------------- completion (§17.1)
     def _finish(self, ticket: Ticket) -> None:
-        """Per-tenant latency accounting + sliced-parent completion: a
-        parent is done when its last piece is; its result is the merge
-        recipe applied to the piece results (when executing)."""
+        """Sliced-parent completion, then logical completion: a parent
+        is done when its last piece is; its result is the merge recipe
+        applied to the piece results (when executing).  The completed
+        ticket (piece-merged parent or plain op) then flows through
+        `_complete_logical` — latency accounting for logical requests,
+        dataflow propagation for graph nodes."""
         parent = ticket.parent
         if parent is None:
-            self.telemetry.record_latency(ticket.tenant, ticket.latency_s)
+            self._complete_logical(ticket)
             return
         if any(p.done_t is None for p in parent.pieces):
             return
@@ -678,7 +919,40 @@ class Runtime:
         if all(p.result is not None for p in parent.pieces):
             parent.result = parent.merge_plan.merge(
                 [p.result for p in parent.pieces])
-        self.telemetry.record_latency(parent.tenant, parent.latency_s)
+        self._complete_logical(parent)
+
+    def _complete_logical(self, ticket: Ticket) -> None:
+        """One whole op finished (merged if it was sliced).  Graph nodes
+        propagate completion through their graph instead of recording a
+        latency of their own (§19.3); bundle members additionally stamp
+        their aggregate handle when they are the last one out."""
+        if ticket.kind == "node":
+            self._complete_node(ticket)
+            return
+        self.telemetry.record_latency(ticket.tenant, ticket.latency_s)
+        agg = ticket.agg
+        if (agg is not None and agg.done_t is None
+                and all(m.done_t is not None for m in agg.members)):
+            agg.done_t = max(m.done_t for m in agg.members)
+
+    def _complete_node(self, tk: Ticket) -> None:
+        """Dataflow propagation (§19.2): wire this node's output (which
+        is whatever the fallback ladder produced, §18.2 — dependents
+        must see fallback-rung outputs) into its dependents' operand
+        slots, release the newly-ready ones into the mixed queue at the
+        completion time, and complete the graph handle once its last
+        node is done.  Released dependents enter fresh queues, so they
+        are planned by the NEXT flush — on the modeled timeline they
+        become available exactly when their producer finished."""
+        handle = tk.graph
+        state = handle.state
+        for name in state.complete(tk.node, tk.result):
+            self._release_node(handle, name, tk.done_t)
+        if state.done:
+            handle.done_t = max(t.done_t for t in handle.nodes.values())
+            handle.plan = tk.plan
+            self.telemetry.record_latency(handle.tenant, handle.latency_s)
+            self.telemetry.record_graph_complete()
 
     def _requeue(self, launch: Launch) -> None:
         """Return a deferred launch's tickets to their class queue with
@@ -956,6 +1230,18 @@ class Runtime:
     @property
     def plan_cache_size(self) -> int:
         return len(self._plan_cache)
+
+
+def _graph_ids(tickets: List[Ticket]) -> Tuple[int, ...]:
+    """Distinct graph-handle seqs a launch's members belong to (pieces
+    resolve through their sliced parent) — ≥2 means the concurrency
+    window genuinely mixed nodes from different graphs/requests (§19.3)."""
+    ids = set()
+    for tk in tickets:
+        owner = tk.parent if tk.parent is not None else tk
+        if owner.graph is not None:
+            ids.add(owner.graph.seq)
+    return tuple(sorted(ids))
 
 
 def _canonical_order(d: GemmDesc) -> tuple:

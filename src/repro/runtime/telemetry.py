@@ -32,6 +32,10 @@ class GroupRecord:
     # Which fallback rung completed the launch (§18.2): None for the
     # planned schedule, else "retry" | "legacy" | "reference".
     fallback: Optional[str] = None
+    # Distinct graph handles with a node in this launch (§19.3); ≥2
+    # entries is the cross-request overlap the dataflow executor exists
+    # to create.
+    graph_ids: tuple = ()
 
     @property
     def model_error(self) -> Optional[float]:
@@ -83,6 +87,16 @@ class Telemetry:
     quarantines: int = 0
     quarantine_evictions: int = 0
     probes: int = 0
+    # Dataflow-graph accounting (DESIGN.md §19.3).  A graph is ONE
+    # logical request — `submitted`/`completed`/`tenant_lat` count it
+    # once, at sink-node completion — and these track the graph-specific
+    # dimensions: how many graphs/nodes were admitted, and the ready-set
+    # depth each mixed concurrency window drew from.
+    graphs_submitted: int = 0
+    graphs_completed: int = 0
+    graph_nodes: int = 0
+    ready_depth_hist: Counter = field(default_factory=Counter)
+    max_ready_depth: int = 0
 
     # ------------------------------------------------------------- record
     def record_submit(self, n: int = 1) -> None:
@@ -157,6 +171,24 @@ class Telemetry:
         """Half-open probes: quarantines released after cooldown (§18.3)."""
         self.probes += n
 
+    def record_graph_submit(self, nodes: int) -> None:
+        """One `OpGraph` admitted with ``nodes`` nodes (§19.3).  The
+        caller records the single logical submit separately."""
+        self.graphs_submitted += 1
+        self.graph_nodes += nodes
+
+    def record_graph_complete(self) -> None:
+        """One graph's sink completed — its latency was just recorded as
+        the graph's single logical completion (§19.3)."""
+        self.graphs_completed += 1
+
+    def record_ready_depth(self, depth: int) -> None:
+        """Graph nodes available to one mixed concurrency window — the
+        dataflow ready-set depth (§19.3)."""
+        self.ready_depth_hist[_bucket(depth)] += 1
+        if depth > self.max_ready_depth:
+            self.max_ready_depth = depth
+
     @property
     def fault_events(self) -> int:
         return sum(self.faults.values())
@@ -230,6 +262,17 @@ class Telemetry:
             for k, logs in sorted(acc.items())
         }
 
+    def cross_graph_groups(self) -> int:
+        """Launched groups whose members came from ≥2 distinct graphs —
+        the §19 acceptance signal: one request's nodes sharing a
+        concurrency window with another's."""
+        return sum(1 for g in self.groups if len(g.graph_ids) >= 2)
+
+    def ready_depth_histogram(self) -> Dict[str, int]:
+        """Power-of-two buckets of per-window graph ready-set depth."""
+        return {k: self.ready_depth_hist[k]
+                for k in sorted(self.ready_depth_hist, key=_bucket_lo)}
+
     def tenant_percentiles(self) -> Dict[str, Dict[str, float]]:
         """Per-tenant p50/p95/p99 latency (ms, nearest-rank on the sorted
         sample) plus count — the §17 metric that matters at many users.
@@ -279,6 +322,12 @@ class Telemetry:
             "quarantines": self.quarantines,
             "quarantine_evictions": self.quarantine_evictions,
             "probes": self.probes,
+            "graphs_submitted": self.graphs_submitted,
+            "graphs_completed": self.graphs_completed,
+            "graph_nodes": self.graph_nodes,
+            "cross_graph_groups": self.cross_graph_groups(),
+            "ready_depths": self.ready_depth_histogram(),
+            "max_ready_depth": self.max_ready_depth,
         }
 
 

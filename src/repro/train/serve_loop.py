@@ -33,7 +33,7 @@ def make_serve_fns(model: Model) -> Tuple[Callable, Callable]:
 def greedy_decode(
     model: Model, params, prompt_batch, *, s_max: int, steps: int,
     cache_dtype=jnp.float32, runtime: Optional[Any] = None,
-    tenant: str = "default", mixed_ops: bool = False,
+    tenant: str = "default", mixed_ops: bool = False, graph: bool = False,
 ):
     """Greedy generation for examples/tests (host loop, jitted steps).
 
@@ -44,7 +44,13 @@ def greedy_decode(
     ``mixed_ops=True`` widens the shadow dispatch to the step's FULL op
     bundle — attention, MoE grouped-GEMM, and SSD scan alongside the
     GEMMs — co-scheduled as one heterogeneous concurrent group via
-    `Runtime.submit_bundle` (DESIGN.md §14)."""
+    `Runtime.submit` (DESIGN.md §14).
+
+    ``graph=True`` (implies mixed ops) submits the step as a dependency
+    graph (`decode_step_graph`, DESIGN.md §19) instead of a flat bundle:
+    the runtime's readiness tracker orders QKV → attention → O-proj →
+    FFN/MoE itself and fills each concurrency window with whatever is
+    ready — concurrent requests overlap across stage boundaries."""
     B = jax.tree.leaves(prompt_batch)[0].shape[0]
     cache = model.init_cache(batch=B, s_max=s_max, dtype=cache_dtype)
     prefill = jax.jit(model.prefill)
@@ -53,14 +59,21 @@ def greedy_decode(
     cache_len = jnp.asarray(length, jnp.int32)
     out = []
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-    step_requests = step_bundle = None
-    if runtime is not None and mixed_ops:
+    step_requests = step_bundle = step_graph = None
+    if runtime is not None and graph:
+        from repro.runtime import decode_step_graph
+        # the dependency structure is identical every step — build the
+        # template once, submit it per step; prewarm seeds GO entries
+        # plus one mixed-plan signature per topological wave
+        step_graph = decode_step_graph(model.cfg, B, context=s_max)
+        runtime.prewarm(step_graph)
+    elif runtime is not None and mixed_ops:
         from repro.runtime import decode_step_op_descs
         # the op bundle is identical every step — derive once, submit
         # per step; prewarm seeds both the GO entries and the bundle's
         # plan-cache signature
         step_bundle = decode_step_op_descs(model.cfg, B, context=s_max)
-        runtime.prewarm_bundle(step_bundle)
+        runtime.prewarm(step_bundle)
     elif runtime is not None:
         from repro.runtime import decode_step_requests, prewarm_decode
         prewarm_decode(runtime, model.cfg, batches=[B])
@@ -69,13 +82,20 @@ def greedy_decode(
         step_requests = decode_step_requests(runtime.ctrl, model.cfg, B)
     for _ in range(steps):
         out.append(tok)
-        if step_bundle is not None:
-            runtime.submit_bundle(step_bundle, tenant=tenant)
+        if step_graph is not None:
+            runtime.submit(step_graph, tenant=tenant)
+        elif step_bundle is not None:
+            runtime.submit(step_bundle, tenant=tenant)
         elif step_requests is not None:
             for req in step_requests:
                 runtime.submit(req, tenant=tenant)
         logits, cache, cache_len = decode(params, tok, cache, cache_len)
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
         if runtime is not None:
-            runtime.flush(force=True)
+            if step_graph is not None:
+                # a graph spans several flushes (each completion wave
+                # releases the next), so drain the whole step
+                runtime.drain()
+            else:
+                runtime.flush(force=True)
     return jnp.concatenate(out, axis=1)

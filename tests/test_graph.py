@@ -1,0 +1,371 @@
+"""Dependency-aware op graphs + the unified submit surface — §19.
+
+Three contracts under test:
+
+1. **Structure** (`OpGraph`): eager validation (cycles, bad slots,
+   double-wired ports, size-inconsistent data edges) and the topological
+   level sets (`waves`) that define the bundle-baseline submission
+   granularity.
+2. **The one submission surface** (`Runtime.submit` / `prewarm`): ops,
+   bundles, and graphs all return a single uniform `Ticket` handle; the
+   historical names survive only as DeprecationWarning wrappers.
+3. **Dataflow semantics**: nodes complete in topological order on the
+   modeled timeline, a graph counts as ONE logical request (latency =
+   sink completion), concurrent graphs overlap inside shared mixed
+   groups, and — the property test — executing a random DAG through the
+   runtime is *bitwise* identical to running its nodes sequentially
+   through `execute_schedule`, including when the fault ladder is live.
+   Operands are integer-valued f32, so "bitwise" is exact, not a
+   tolerance.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import ConcurrencyController, GemmDesc, GOLibrary
+from repro.core.scheduler import (
+    GroupPlan,
+    Schedule,
+    bind_operands,
+    execute_schedule,
+)
+from repro.runtime import (
+    MIXED_CLASS,
+    FaultInjector,
+    FaultRule,
+    GraphError,
+    OpGraph,
+    Runtime,
+    RuntimeConfig,
+    decode_step_graph,
+    decode_step_op_descs,
+    submit_decode_graph,
+)
+from tests.hypothesis_compat import given, settings, st
+
+D = GemmDesc(32, 32, 32, dtype="f32")          # square: any wiring is legal
+ARCHES = ("stablelm-3b", "deepseek-v2-lite-16b", "zamba2-1.2b",
+          "xlstm-350m")
+
+
+def _rt(execute: bool = False, inj=None, **kw) -> Runtime:
+    kw.setdefault("window_s", 0.0)
+    if execute:
+        kw.setdefault("execute", True)
+        kw.setdefault("interpret", True)
+    return Runtime(ConcurrencyController(library=GOLibrary()),
+                   RuntimeConfig(**kw), fault_injector=inj)
+
+
+def _ints(seed: int, shape) -> jnp.ndarray:
+    # Integer-valued f32: exact in f32 accumulation -> bitwise oracle.
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.integers(-3, 4, size=shape).astype(np.float32))
+
+
+def _chain(n: int) -> OpGraph:
+    """n0 -> n1 -> ... feeding each successor's "a" slot."""
+    g = OpGraph()
+    g.add("n0", D, operands={"a": _ints(0, (D.M, D.K)),
+                             "b": _ints(1, (D.K, D.N))})
+    for i in range(1, n):
+        g.add(f"n{i}", D, deps={"a": f"n{i-1}"},
+              operands={"b": _ints(i + 1, (D.K, D.N))})
+    return g
+
+
+# ------------------------------------------------------ §19.1 structure
+def test_duplicate_name_rejected():
+    g = OpGraph()
+    g.add("x", D)
+    with pytest.raises(GraphError, match="duplicate"):
+        g.add("x", D)
+
+
+def test_unknown_endpoint_rejected():
+    g = OpGraph()
+    g.add("x", D, deps={"a": "ghost"})
+    with pytest.raises(GraphError, match="ghost"):
+        g.validate()
+
+
+def test_self_edge_rejected():
+    g = OpGraph()
+    g.add("x", D)
+    g.add_edge("x", "x", slot="a")
+    with pytest.raises(GraphError, match="self-edge"):
+        g.validate()
+
+
+def test_cycle_names_involved_nodes():
+    g = OpGraph()
+    g.add("a", D)
+    g.add("b", D, deps={"a": "a"})
+    g.add_edge("b", "a", slot="b")
+    with pytest.raises(GraphError, match="cycle involving: a, b"):
+        g.validate()
+
+
+def test_bad_slot_rejected():
+    g = OpGraph()
+    g.add("x", D)
+    g.add("y", D, deps={"q": "x"})       # gemm slots are "a"/"b"
+    with pytest.raises(GraphError, match="slot 'q' invalid"):
+        g.validate()
+
+
+def test_double_wired_slot_rejected():
+    g = OpGraph()
+    g.add("x", D)
+    g.add("y", D)
+    g.add("z", D, deps={"a": "x"})
+    g.add_edge("y", "z", slot="a")
+    with pytest.raises(GraphError, match="wired twice"):
+        g.validate()
+
+
+def test_size_mismatch_needs_transform():
+    g = OpGraph()
+    g.add("big", GemmDesc(64, 64, 64, dtype="f32"))
+    g.add("small", D, deps={"a": "big"})   # 4096 elements into 1024
+    with pytest.raises(GraphError, match="size mismatch"):
+        g.validate()
+    # an explicit transform takes responsibility for the layout
+    g2 = OpGraph()
+    g2.add("big", GemmDesc(64, 64, 64, dtype="f32"))
+    g2.add("small", D, deps={"a": ("big", lambda r: r[:32, :32])})
+    g2.validate()
+
+
+def test_control_edges_skip_size_checks():
+    g = OpGraph()
+    g.add("big", GemmDesc(64, 64, 64, dtype="f32"))
+    g.add("small", D, after=["big"])
+    assert g.waves() == [["big"], ["small"]]
+
+
+def test_waves_are_longest_chain_levels():
+    # diamond with a long arm: d's level is driven by the a->b->c chain
+    g = OpGraph()
+    g.add("a", D)
+    g.add("b", D, deps={"a": "a"})
+    g.add("c", D, deps={"a": "b"})
+    g.add("d", D, deps={"a": "a"}, after=["c"])
+    assert g.waves() == [["a"], ["b"], ["c"], ["d"]]
+    assert g.sinks() == ["d"]
+    assert g.validate() == ["a", "b", "c", "d"]
+
+
+@pytest.mark.parametrize("arch", ARCHES)
+def test_decode_step_graph_validates(arch):
+    cfg = get_arch(arch)
+    g = decode_step_graph(cfg, batch=4)
+    order = g.validate()
+    assert len(order) == len(g) >= 4     # smallest: xLSTM in/scan/norm/out
+    assert len(g.waves()) >= 3            # qkv -> attn/scan -> out -> ...
+    assert g.sinks()
+    # spans the same kernel families as the flat §14 bundle helper (the
+    # graph may choose a different decomposition, e.g. grouped-only MoE)
+    from repro.core import family_of
+    assert {family_of(d) for d in g.descs()} == {
+        family_of(d) for d in decode_step_op_descs(cfg, 4)}
+
+
+def test_decode_step_graph_layers_prefix_and_chain():
+    g = decode_step_graph(get_arch("stablelm-3b"), batch=4, layers=2)
+    assert any(n.startswith("L0.") for n in g.nodes)
+    assert any(n.startswith("L1.") for n in g.nodes)
+    # layer 1 cannot start before layer 0's sinks complete
+    first_l1_wave = min(i for i, w in enumerate(g.waves())
+                       if any(n.startswith("L1.") for n in w))
+    last_l0_wave = max(i for i, w in enumerate(g.waves())
+                      if any(n.startswith("L0.") for n in w))
+    assert first_l1_wave > 0 and last_l0_wave >= first_l1_wave - 1
+
+
+# --------------------------------------- §19.5 the one submit() surface
+def test_submit_is_polymorphic_and_handles_are_uniform():
+    rt = _rt()
+    op = rt.submit(D, now=0.0)
+    bundle = rt.submit([D, GemmDesc(64, 128, 128)], now=0.0)
+    graph = rt.submit(_chain(3), now=0.0)
+    assert (op.kind, bundle.kind, graph.kind) == ("op", "bundle", "graph")
+    rt.drain(now=0.0)
+    assert op.done and bundle.done and graph.done
+    # uniform addressing: bundles by position, graphs by node name
+    assert bundle[0].desc == D
+    assert graph["n2"].done_t == graph.done_t
+    assert set(graph.nodes) == {"n0", "n1", "n2"}
+    with pytest.raises(TypeError):
+        op["n0"]
+
+
+def test_deprecated_wrappers_warn_and_delegate():
+    descs = [D, GemmDesc(64, 128, 128)]
+    rt = _rt()
+    with pytest.warns(DeprecationWarning, match="prewarm"):
+        rt.prewarm_bundle(descs)
+    with pytest.warns(DeprecationWarning, match="submit"):
+        tks = rt.submit_bundle(descs, now=0.0)
+    assert isinstance(tks, list) and len(tks) == 2   # legacy return shape
+    rt.drain(now=0.0)
+    assert all(t.done for t in tks)
+
+    rt2 = _rt()
+    from repro.runtime import submit_decode_bundle
+    with pytest.warns(DeprecationWarning, match="submit"):
+        tks2 = submit_decode_bundle(rt2, get_arch("stablelm-3b"), batch=4)
+    assert isinstance(tks2, list) and len(tks2) >= 5
+    rt2.drain()
+    assert all(t.done for t in tks2)
+
+
+def test_no_warning_on_the_new_surface():
+    rt = _rt()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        rt.prewarm([D, GemmDesc(64, 128, 128)])
+        rt.submit([D, GemmDesc(64, 128, 128)], now=0.0)
+        rt.submit(_chain(2), now=0.0)
+        rt.drain(now=0.0)
+
+
+def test_prewarm_graph_seeds_every_wave_plan():
+    g = decode_step_graph(get_arch("deepseek-v2-lite-16b"), batch=4)
+    rt = _rt()
+    rt.prewarm(g)
+    rt.submit(g, now=0.0)
+    launches = rt.drain(now=0.0)
+    assert launches and all(l.cache_hit for l in launches)
+    assert all(l.class_key == MIXED_CLASS for l in launches)
+
+
+# -------------------------------------------- §19.2/.3 dataflow semantics
+def test_nodes_complete_in_topological_order():
+    g = decode_step_graph(get_arch("stablelm-3b"), batch=8)
+    rt = _rt()
+    h = rt.submit(g, now=0.0)
+    rt.drain(now=0.0)
+    done = {n: h.nodes[n].done_t for n in g.nodes}
+    for e in g.edges:
+        assert done[e.src] <= done[e.dst], (e.src, e.dst)
+    assert h.done_t == max(done.values())
+
+
+def test_graph_is_one_logical_request():
+    g = decode_step_graph(get_arch("stablelm-3b"), batch=8)
+    rt = _rt()
+    h = rt.submit(g, tenant="t0", now=0.0)
+    rt.drain(now=0.0)
+    tele = rt.telemetry
+    assert tele.submitted == tele.completed == 1       # not len(g)
+    assert tele.graphs_submitted == tele.graphs_completed == 1
+    assert tele.graph_nodes == len(g)
+    # latency is sink completion, and the tenant percentile sees it
+    assert h.latency_s == h.done_t - 0.0 > 0
+    pct = tele.tenant_percentiles()["t0"]
+    assert pct["n"] == 1
+    assert pct["p99_ms"] == pytest.approx(h.latency_s * 1e3, abs=1e-3)
+
+
+def test_concurrent_graphs_share_mixed_groups():
+    rt = _rt()
+    ha = rt.submit(decode_step_graph(get_arch("deepseek-v2-lite-16b"), 4),
+                   tenant="moe", now=0.0)
+    hb = rt.submit(decode_step_graph(get_arch("zamba2-1.2b"), 4),
+                   tenant="hybrid", now=0.0)
+    rt.drain(now=0.0)
+    assert ha.done and hb.done
+    assert rt.telemetry.cross_graph_groups() >= 1
+    assert rt.telemetry.max_ready_depth >= 2
+
+
+def test_graph_executes_bitwise_vs_sequential():
+    g = _chain(3)
+    rt = _rt(execute=True)
+    h = rt.submit(g, now=0.0)
+    rt.drain(now=0.0)
+    expect = _sequential_oracle(rt, g)
+    for name, want in expect.items():
+        got = h.result_of(name)
+        assert got is not None and jnp.array_equal(got, want), name
+    assert set(h.results()) == set(g.nodes)
+
+
+def _sequential_oracle(rt: Runtime, g: OpGraph):
+    """Run the graph node-by-node in topological order through
+    `execute_schedule` (CD=1, isolated tile) — the §19.4 property-test
+    oracle."""
+    results = {}
+    for name in g.validate():
+        node = g.nodes[name]
+        slots = dict(node.operands)
+        for e in g.edges:
+            if e.dst == name and e.slot is not None:
+                r = results[e.src]
+                slots[e.slot] = (e.transform(r) if e.transform is not None
+                                 else r.reshape(
+                                     slots.get(e.slot).shape
+                                     if slots.get(e.slot) is not None
+                                     else (node.desc.M, node.desc.K)))
+        req = bind_operands(node.desc, (slots["a"], slots["b"]))
+        tile = rt.ctrl.lib.get(node.desc).isolated
+        sched = Schedule(groups=[GroupPlan(indices=[0], cd=1, tile=tile,
+                                           mode="single",
+                                           modeled_time_s=0.0)])
+        (results[name],) = execute_schedule([req], sched, interpret=True)
+    return results
+
+
+# ------------------------------------------------- §19.4 property test
+def _random_dag(seed: int, n: int, edges: list) -> OpGraph:
+    """A GEMM DAG over square 32^3 descs: node i may feed node j>i's "a"
+    slot (square shapes make every wiring size-legal); "b" and unfed "a"
+    slots carry integer operands."""
+    g = OpGraph()
+    fed = {j for _, j in edges}
+    for i in range(n):
+        ops = {"b": _ints(seed * 97 + 2 * i, (D.K, D.N))}
+        if i not in fed:
+            ops["a"] = _ints(seed * 97 + 2 * i + 1, (D.M, D.K))
+        deps = {"a": f"n{i_src}" for i_src, j in edges if j == i}
+        g.add(f"n{i}", D, deps=deps, operands=ops)
+    return g
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.data())
+def test_random_dags_match_sequential_execution(data):
+    n = data.draw(st.integers(2, 4), label="nodes")
+    # each non-root picks exactly one producer among its predecessors
+    edges = []
+    for j in range(1, n):
+        src = data.draw(st.one_of(st.none(), st.integers(0, j - 1)),
+                        label=f"parent[{j}]")
+        if src is not None:
+            edges.append((src, j))
+    seed = data.draw(st.integers(0, 2 ** 16), label="seed")
+    faulty = data.draw(st.booleans(), label="faulty")
+    g = _random_dag(seed, n, edges)
+
+    inj = (FaultInjector((FaultRule("raise", 1.0, max_faults=2),), seed=1)
+           if faulty else None)
+    rt = _rt(execute=True, inj=inj)
+    h = rt.submit(g, now=0.0)
+    rt.drain(now=0.0)
+    assert h.done and rt.telemetry.graphs_completed == 1
+
+    # topological completion order on the modeled timeline
+    for e in g.edges:
+        assert h.nodes[e.src].done_t <= h.nodes[e.dst].done_t
+
+    # bitwise equality with the sequential per-node oracle — fault-ladder
+    # rungs (retry/legacy/reference) must not change a single bit
+    oracle = _rt(execute=True)
+    expect = _sequential_oracle(oracle, g)
+    for name, want in expect.items():
+        assert jnp.array_equal(h.result_of(name), want), name
